@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: table formatting + result registry."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def table(title: str, headers: list[str], rows: list[list]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    def fmt(cells):
+        return " | ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+    lines = [f"## {title}", fmt(headers),
+             "-|-".join("-" * w for w in widths)]
+    lines += [fmt(r) for r in rows]
+    return "\n".join(lines)
+
+
+def emit(name: str, title: str, headers, rows, notes: str = ""):
+    txt = table(title, headers, rows)
+    if notes:
+        txt += f"\n{notes}"
+    print(txt + "\n", flush=True)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump({"title": title, "headers": headers,
+                   "rows": [[str(c) for c in r] for r in rows],
+                   "notes": notes}, f, indent=1)
+    return txt
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    return out, (time.time() - t0) / reps

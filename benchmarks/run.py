@@ -1,0 +1,46 @@
+"""Benchmark runner: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig1 fig5  # subset
+"""
+import sys
+import time
+
+from . import (blocksweep, fig1_accuracy, fig4_mantissa, fig5_rounding,
+               fig8_underflow, fig9_representation, fig11_exponent_range,
+               fig13_patterns, fig14_throughput,
+               table12_mantissa_expectation)
+
+BENCHES = {
+    "table12": table12_mantissa_expectation,
+    "fig1": fig1_accuracy,
+    "fig4": fig4_mantissa,
+    "fig5": fig5_rounding,
+    "fig8": fig8_underflow,
+    "fig9": fig9_representation,
+    "fig11": fig11_exponent_range,
+    "fig13": fig13_patterns,
+    "fig14": fig14_throughput,
+    "blocksweep": blocksweep,
+}
+
+
+def main(argv=None) -> int:
+    names = (argv or sys.argv[1:]) or list(BENCHES)
+    failures = []
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ({BENCHES[name].__name__}) ===", flush=True)
+        ok = BENCHES[name].run()
+        print(f"--- {name}: {'PASS' if ok else 'FAIL'} "
+              f"({time.time()-t0:.1f}s)\n", flush=True)
+        if not ok:
+            failures.append(name)
+    print(f"== benchmarks: {len(names) - len(failures)}/{len(names)} pass ==")
+    if failures:
+        print("failed:", ", ".join(failures))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

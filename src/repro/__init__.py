@@ -1,0 +1,2 @@
+"""repro: Ootomo-Yokota error-corrected Tensor-Core GEMM (TCEC) as a
+first-class precision policy in a multi-pod JAX training/serving framework."""

@@ -1,0 +1,6 @@
+"""Architecture registry: one module per assigned arch (--arch <id>)."""
+from .base import (LONG_CONTEXT_ARCHS, SHAPES, ModelConfig, ShapeConfig,
+                   get_config, get_smoke_config, list_archs, register)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "LONG_CONTEXT_ARCHS",
+           "get_config", "get_smoke_config", "list_archs", "register"]

@@ -1,0 +1,10 @@
+"""repro.core — the paper's contribution: error-corrected low-precision GEMM
+(Ootomo & Yokota 2022) as a composable JAX precision policy."""
+from .policy import (POLICIES, PrecisionPolicy, get_policy, pdot, policy_bmm,
+                     policy_mm)
+from .split import MANTISSA_BITS, reconstruct, split
+
+__all__ = [
+    "POLICIES", "PrecisionPolicy", "get_policy", "pdot", "policy_bmm",
+    "policy_mm", "MANTISSA_BITS", "split", "reconstruct",
+]

@@ -1,0 +1,245 @@
+"""Precision policies: the paper's technique as a framework-wide matmul knob.
+
+Every weight/activation contraction in the model zoo routes through
+:func:`pdot` (einsum front-end) or :func:`policy_mm` / :func:`policy_bmm`
+(canonical 2D / batched matmul cores).  A :class:`PrecisionPolicy` selects
+
+  * ``fp32``          — plain f32 GEMM (cublas_simt baseline of the paper)
+  * ``bf16``          — single-pass bf16 MXU GEMM (TC-without-correction baseline)
+  * ``tcec_bf16x3``   — 2-way bf16 split, 3 passes  (halfhalf-analogue on TPU)
+  * ``tcec_bf16x6``   — 3-way bf16 split, 6 passes  (FP32-matching; the headline)
+  * ``fp16_markidis`` — 2-way fp16 split, 4 passes, no scaling   (Eq. (6))
+  * ``fp16_halfhalf`` — 2-way fp16 split, 3 passes, 2**11 scaling (Eq. (19)-(24))
+
+The emulation follows the paper's corrected accumulation discipline: each kept
+split-product ``a_i @ b_j`` is an independent low-precision-in / f32-out GEMM
+(the MXU contract: exact products, f32 accumulation — no RZ recoupling), and
+same-scale products are summed into *separate* f32 accumulators which a scaled
+epilogue folds from the smallest scale upward (Code 3's frag_c / frag_dc).
+
+Backward passes are defined via ``custom_vjp`` so that the gradient GEMMs
+``dA = g @ B^T`` and ``dB = A^T @ g`` use the *same* policy — on TPU both
+directions stay on the MXU instead of falling back to f32 dots through the
+autodiff of the cast chain.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .split import MANTISSA_BITS, split
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """A GEMM execution recipe (see module docstring)."""
+    name: str
+    dtype: str = "float32"          # storage dtype of the split terms
+    n_splits: int = 1               # number of split terms per operand
+    scale_bits: int = 0             # residual pre-cast scale shift (Eq. 18)
+    keep: tuple = ()                # kept product terms (i, j); () = all/plain
+    upcast_products: bool = False   # f32-upcast operands before each pass
+                                    # (fp16 reproduction path: TCs multiply in
+                                    # full precision; XLA-CPU fp16 dots do not)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def passes(self) -> int:
+        return max(1, len(self.keep))
+
+    def is_plain(self) -> bool:
+        return self.n_splits == 1
+
+
+def _tcec(name, dtype, n_splits, keep, upcast=False):
+    mb = MANTISSA_BITS[jnp.dtype(dtype)] + 1  # incl. implicit bit
+    return PrecisionPolicy(name=name, dtype=dtype, n_splits=n_splits,
+                           scale_bits=mb, keep=tuple(keep),
+                           upcast_products=upcast)
+
+
+POLICIES: dict[str, PrecisionPolicy] = {
+    "fp32": PrecisionPolicy(name="fp32"),
+    "bf16": PrecisionPolicy(name="bf16", dtype="bfloat16"),
+    # TPU-native production policies -------------------------------------
+    "tcec_bf16x3": _tcec("tcec_bf16x3", "bfloat16", 2,
+                         [(0, 0), (0, 1), (1, 0)]),
+    "tcec_bf16x6": _tcec("tcec_bf16x6", "bfloat16", 3,
+                         [(0, 0), (0, 1), (1, 0), (1, 1), (0, 2), (2, 0)]),
+    # paper-faithful reproduction policies (fp16 Tensor-Core model) -------
+    "fp16_markidis": PrecisionPolicy(
+        name="fp16_markidis", dtype="float16", n_splits=2, scale_bits=0,
+        keep=((0, 0), (0, 1), (1, 0), (1, 1)), upcast_products=True),
+    "fp16_halfhalf": PrecisionPolicy(
+        name="fp16_halfhalf", dtype="float16", n_splits=2, scale_bits=11,
+        keep=((0, 0), (0, 1), (1, 0)), upcast_products=True),
+}
+
+
+def get_policy(p) -> PrecisionPolicy:
+    if isinstance(p, PrecisionPolicy):
+        return p
+    return POLICIES[p]
+
+
+# ---------------------------------------------------------------------------
+# Emulated TCEC GEMM (XLA path; the Pallas kernel in repro.kernels fuses the
+# same math into one VMEM-tiled kernel for the shapes it supports).
+# ---------------------------------------------------------------------------
+
+def _cpu_upcast_dots() -> bool:
+    """XLA-CPU's thunk runtime lacks bf16 x bf16 -> f32 DotThunks for some
+    shapes (execution-time UNIMPLEMENTED). On CPU we upcast the already-
+    rounded operands to f32 — bit-identical results (bf16 -> f32 is exact,
+    products/accumulation stay f32 = the MXU contract). The dry-run sets
+    REPRO_KEEP_BF16_DOTS=1 so compiled-artifact byte accounting keeps the
+    true bf16 operand traffic of the TPU target."""
+    import os
+    if os.environ.get("REPRO_KEEP_BF16_DOTS"):
+        return False
+    return jax.default_backend() == "cpu"
+
+
+def _pass_dot(a, b, policy: PrecisionPolicy, dims):
+    """One split-product GEMM: low-precision in, f32 out (MXU contract)."""
+    if policy.upcast_products or _cpu_upcast_dots():
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+    return jax.lax.dot_general(a, b, dims,
+                               preferred_element_type=jnp.float32,
+                               precision=jax.lax.Precision.DEFAULT)
+
+
+def _tcec_dot(a, b, policy: PrecisionPolicy, dims):
+    """Term-expanded GEMM with per-scale-group f32 accumulators + epilogue."""
+    sa = split(a, policy.jdtype, policy.n_splits, policy.scale_bits)
+    sb = split(b, policy.jdtype, policy.n_splits, policy.scale_bits)
+    groups: dict[int, jax.Array] = {}
+    for (i, j) in policy.keep:
+        t = _pass_dot(sa[i], sb[j], policy, dims)
+        g = i + j
+        groups[g] = t if g not in groups else groups[g] + t
+    # epilogue: fold scale groups smallest-first (paper Code 3: += dc / 2048)
+    out = None
+    for g in sorted(groups, reverse=True):
+        term = groups[g] * jnp.float32(2.0 ** (-g * policy.scale_bits))
+        out = term if out is None else out + term
+    return out
+
+
+def _plain_dot(a, b, policy: PrecisionPolicy, dims):
+    if policy.name == "fp32":
+        return jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
+                                   dims, precision=jax.lax.Precision.HIGHEST,
+                                   preferred_element_type=jnp.float32)
+    lp = policy.jdtype
+    a = a.astype(lp)
+    b = b.astype(lp)
+    if _cpu_upcast_dots():  # values stay lp-rounded; products/accum f32
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+    return jax.lax.dot_general(a, b, dims,
+                               preferred_element_type=jnp.float32,
+                               precision=jax.lax.Precision.DEFAULT)
+
+
+def _dot_impl(a, b, policy: PrecisionPolicy, dims):
+    if policy.is_plain():
+        return _plain_dot(a, b, policy, dims)
+    return _tcec_dot(a, b, policy, dims)
+
+
+# --- canonical core with policy-preserving backward ------------------------
+#
+# Operands are only TRANSPOSED into (batch..., m..., k...) x (batch..., k...,
+# n...) layout — never reshaped — and contracted with a multi-dim
+# dot_general. Avoiding reshapes keeps GSPMD sharding propagation exact
+# (reshape merges of a sharded dim are where propagation gives up and
+# replicates, which for attention scores costs 16x memory per device).
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dg(policy_name: str, nbatch: int, nm: int, nk: int, nn: int):
+    policy = get_policy(policy_name)
+    bdims = tuple(range(nbatch))
+
+    def dims_fwd():
+        ak = tuple(range(nbatch + nm, nbatch + nm + nk))
+        bk = tuple(range(nbatch, nbatch + nk))
+        return ((ak, bk), (bdims, bdims))
+
+    @jax.custom_vjp
+    def dg(at, bt):
+        return _dot_impl(at, bt, policy, dims_fwd())
+
+    def fwd(at, bt):
+        return dg(at, bt), (at, bt)
+
+    def bwd(res, g):
+        at, bt = res
+        # g: (batch, m, n); da = g . bt over n -> (batch, m, k)
+        gn = tuple(range(nbatch + nm, nbatch + nm + nn))
+        btn = tuple(range(nbatch + nk, nbatch + nk + nn))
+        da = _dot_impl(g, bt, policy, ((gn, btn), (bdims, bdims)))
+        # db = at . g over m -> (batch, k, n)
+        atm = tuple(range(nbatch, nbatch + nm))
+        gm = tuple(range(nbatch, nbatch + nm))
+        db = _dot_impl(at, g, policy, ((atm, gm), (bdims, bdims)))
+        return da.astype(at.dtype), db.astype(bt.dtype)
+
+    dg.defvjp(fwd, bwd)
+    return dg
+
+
+def policy_mm(a, b, policy="fp32"):
+    """(M, K) @ (K, N) -> (M, N) f32 under ``policy``."""
+    return _make_dg(get_policy(policy).name, 0, 1, 1, 1)(a, b)
+
+
+def policy_bmm(a, b, policy="fp32"):
+    """(B, M, K) @ (B, K, N) -> (B, M, N) f32 under ``policy``."""
+    return _make_dg(get_policy(policy).name, 1, 1, 1, 1)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Binary einsum front-end: transpose -> dot_general core -> restore layout.
+# ---------------------------------------------------------------------------
+
+def _parse(subscripts: str):
+    lhs, out = subscripts.replace(" ", "").split("->")
+    a_sub, b_sub = lhs.split(",")
+    a_set, b_set, o_set = set(a_sub), set(b_sub), set(out)
+    batch = [c for c in a_sub if c in b_set and c in o_set]
+    contract = [c for c in a_sub if c in b_set and c not in o_set]
+    m_dims = [c for c in a_sub if c not in b_set]
+    n_dims = [c for c in b_sub if c not in a_set]
+    assert set(out) == set(batch) | set(m_dims) | set(n_dims), subscripts
+    return a_sub, b_sub, out, batch, contract, m_dims, n_dims
+
+
+def pdot(subscripts: str, a, b, policy="fp32"):
+    """Policy-routed binary einsum (the framework's single GEMM chokepoint).
+
+    Supports any two-operand einsum with no repeated/diagonal indices — i.e.
+    every contraction in the model zoo (qkv/out projections, MLPs, MoE expert
+    GEMMs, attention QK^T / PV, MLA low-rank factors, SSD chunk matmuls).
+    """
+    policy = get_policy(policy)
+    a_sub, b_sub, out, batch, contract, m_dims, n_dims = _parse(subscripts)
+
+    def ax(sub, order):
+        return [sub.index(c) for c in order]
+
+    at = jnp.transpose(a, ax(a_sub, batch + m_dims + contract))
+    bt = jnp.transpose(b, ax(b_sub, batch + contract + n_dims))
+    core = _make_dg(policy.name, len(batch), len(m_dims), len(contract),
+                    len(n_dims))
+    o = core(at, bt)                     # (batch..., m..., n...)
+    cur = batch + m_dims + n_dims
+    return jnp.transpose(o, ax("".join(cur), out))

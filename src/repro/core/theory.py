@@ -1,0 +1,156 @@
+"""Paper theory, computed exactly: mantissa-length expectation (Tables 1-2)
+and underflow probabilities (Eqs. 13-17), generalized to any split dtype.
+
+The mantissa analysis enumerates *all* 2^23 FP32 mantissas (vectorized
+integer arithmetic — no sampling error) and simulates the two-term split
+``v ~= v_lp + dv_lp`` at a given low-precision width and rounding mode,
+reporting the expected number of kept mantissa bits.  The paper's numbers
+(RN: 22.75, RZ: 22.5 of 23 explicit bits for FP16 splits) fall out exactly.
+
+The underflow analysis evaluates the closed forms P_u(e_v) / P_{u+gu}(e_v)
+for arbitrary (mantissa length, exponent bias) so it covers both the paper's
+FP16 Tensor Cores and this framework's bf16 MXU targets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+F32_MANT = 23  # explicit bits
+
+
+@dataclass(frozen=True)
+class LPFormat:
+    name: str
+    mant: int   # explicit mantissa bits
+    bias: int   # exponent bias
+
+FP16 = LPFormat("fp16", 10, 15)
+BF16 = LPFormat("bf16", 7, 127)
+TF32 = LPFormat("tf32", 10, 127)
+
+
+def _round_int(v: np.ndarray, q: int, mode: str) -> np.ndarray:
+    """Round integers ``v`` to multiples of ``q`` (q = power of two)."""
+    if mode == "rz":
+        return np.sign(v) * (np.abs(v) // q) * q
+    # RN ties-to-even on the quotient
+    quot = np.abs(v) / q
+    t = np.rint(quot)  # ties-to-even for half-integers
+    return np.sign(v) * t.astype(np.int64) * q
+
+
+def split_kept_bits(lp_mant: int = 10, mode: str = "rn") -> np.ndarray:
+    """Bits of FP32 mantissa lost by a 2-term split, for every mantissa.
+
+    Models the mantissa of v as the 24-bit integer ``M = 2^23 + m`` (implicit
+    bit set).  v_lp keeps the top ``lp_mant+1`` bits (quantum q0 = 2^(23-lp_mant-1+1)
+    ... computed from M's width), the residual is requantized to an
+    (lp_mant+1)-bit window at its own leading bit — floating-point, so the
+    quantum depends on the residual's magnitude.  Returns, per mantissa value,
+    the number of bits needed to store the final error (0 = exact).
+    """
+    width = lp_mant + 1                       # incl. implicit bit
+    M = (np.arange(2 ** F32_MANT, dtype=np.int64) + (1 << F32_MANT))
+    q0 = 1 << (F32_MANT + 1 - width)          # hi-part quantum
+    hi = _round_int(M, q0, mode)
+    r = M - hi
+    # residual quantum: keep ``width`` bits at the residual's own leading bit
+    absr = np.abs(r)
+    lead = np.zeros_like(absr)
+    nz = absr > 0
+    lead[nz] = np.floor(np.log2(absr[nz])).astype(np.int64)
+    q1 = np.where(lead + 1 > width, 1 << np.maximum(lead + 1 - width, 0), 1)
+    lo = _round_int(r, q1, mode)
+    err = np.abs(M - (hi + lo))
+    bits = np.zeros_like(err)
+    nz = err > 0
+    bits[nz] = np.floor(np.log2(err[nz])).astype(np.int64) + 1
+    return bits
+
+
+def expected_mantissa_length(lp_mant: int = 10, mode: str = "rn") -> float:
+    """E[kept mantissa length] of the 2-term split (Table 1/2 bottom line)."""
+    bits_lost = split_kept_bits(lp_mant, mode)
+    return F32_MANT - float(bits_lost.mean())
+
+
+def p_l0(n: int, lp_mant: int = 10) -> float:
+    """Paper Eq. (14): distribution of l0 = run of zeros below the hi part."""
+    lmax = F32_MANT - lp_mant
+    if n < 0 or n > lmax:
+        return 0.0
+    if n == lmax:
+        return 0.5 ** lmax
+    return 0.5 ** (n + 1)
+
+
+def p_underflow_gradual(e_v: int, fmt: LPFormat = FP16,
+                        scale_bits: int = 0) -> float:
+    """Eq. (15): P[underflow or gradual underflow] in the residual cast.
+
+    ``e_v`` is the unbiased exponent of v_f32; ``scale_bits`` models the
+    paper's Eq. (18) pre-cast scaling (adds to the residual exponent).
+    """
+    lmax = F32_MANT - fmt.mant
+    lo = (e_v + scale_bits) - fmt.mant + fmt.bias - 2
+    return sum(p_l0(l, fmt.mant) for l in range(max(lo + 1, 0), lmax + 1))
+
+
+def p_underflow(e_v: int, fmt: LPFormat = FP16, scale_bits: int = 0) -> float:
+    """Eq. (17): P[full underflow] in the residual cast."""
+    lmax = F32_MANT - fmt.mant
+    lo = (e_v + scale_bits) + fmt.bias - 2
+    return sum(p_l0(l, fmt.mant) for l in range(max(lo + 1, 0), lmax + 1))
+
+
+def measure_underflow(e_v: int, fmt: LPFormat = FP16, scale_bits: int = 0,
+                      n: int = 200_000, seed: int = 0) -> tuple[float, float]:
+    """Monte-Carlo counterpart of Eqs. (15)/(17) using real IEEE casts.
+
+    Draws v with fixed exponent ``e_v`` and uniform mantissa, performs the
+    paper's split with RZ in the hi cast (the assumption under which the
+    closed forms are derived), and counts residuals that land at zero
+    (underflow) or in the subnormal band (gradual underflow).
+    Returns (P_u, P_{u+gu}).
+    """
+    import ml_dtypes  # ships with jax
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, 2 ** F32_MANT, size=n, dtype=np.int64)
+    v = ((1 << F32_MANT) + m).astype(np.float64) * 2.0 ** (e_v - F32_MANT)
+    v = v.astype(np.float32)
+    np_lp = {"fp16": np.float16, "bf16": ml_dtypes.bfloat16}[fmt.name]
+    # hi part with RZ (theory assumption): truncate to fmt.mant+1 bits
+    width = fmt.mant + 1
+    mm, ee = np.frexp(v.astype(np.float64))
+    hi = np.ldexp(np.trunc(mm * 2.0 ** width), ee - width).astype(np.float32)
+    resid = ((v.astype(np.float64) - hi) * 2.0 ** scale_bits).astype(np.float32)
+    dlp = resid.astype(np_lp)
+    exact_zero = resid == 0
+    tiny = 2.0 ** (-(fmt.bias - 1))          # smallest normal in lp
+    u = (dlp.astype(np.float32) == 0) & ~exact_zero
+    gu = (np.abs(dlp.astype(np.float32)) < tiny) & ~exact_zero
+    return float(u.mean()), float(gu.mean())
+
+
+def representable_relative_error(values: np.ndarray, policy_name: str) -> np.ndarray:
+    """Fig. 9: relative representation error of each policy over a value grid."""
+    from . import policy as P
+    import jax.numpy as jnp
+    from .split import split as jsplit, reconstruct
+    v = np.asarray(values, dtype=np.float32)
+    pol = P.get_policy(policy_name) if policy_name in P.POLICIES else None
+    if policy_name == "fp32":
+        rec = v.astype(np.float32)
+    elif policy_name in ("fp16", "bf16"):
+        import ml_dtypes
+        dt = {"fp16": np.float16, "bf16": ml_dtypes.bfloat16}[policy_name]
+        rec = v.astype(dt).astype(np.float64)
+    else:
+        parts = jsplit(jnp.asarray(v), pol.jdtype, pol.n_splits, pol.scale_bits)
+        rec = np.asarray(reconstruct(parts, pol.scale_bits), dtype=np.float64)
+    ref = v.astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.abs(rec - ref) / np.abs(ref)
+    return np.where(ref == 0, 0.0, rel)

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, device_batch, host_batch

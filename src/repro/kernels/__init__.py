@@ -1,0 +1,9 @@
+"""TPU Pallas kernels for the paper's compute hot-spot: the error-corrected
+single-precision GEMM itself (the paper's CUTLASS kernel, re-derived for the
+bf16 MXU + VMEM memory hierarchy)."""
+from .ops import pick_block, tcec_matmul
+from .ref import matmul_f64, tcec_matmul_ref
+from .tcec_matmul import VMEM_BUDGET, tcec_matmul_pallas, vmem_bytes
+
+__all__ = ["tcec_matmul", "pick_block", "tcec_matmul_ref", "matmul_f64",
+           "tcec_matmul_pallas", "vmem_bytes", "VMEM_BUDGET"]

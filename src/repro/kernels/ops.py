@@ -1,0 +1,64 @@
+"""Public jit'd entry point for the TCEC matmul kernel.
+
+Handles backend dispatch (compiled on TPU, ``interpret=True`` elsewhere),
+padding to MXU-aligned block multiples, and block-shape selection under the
+VMEM budget.  Callers that want the technique without caring about kernels
+should use :func:`repro.core.pdot`, which lowers to the same math at the XLA
+level; this wrapper is the explicit-kernel path benchmarked in §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .tcec_matmul import VMEM_BUDGET, tcec_matmul_pallas, vmem_bytes
+from repro.core.policy import get_policy
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_block(M: int, N: int, K: int, policy_name: str) -> tuple[int, int, int]:
+    """Largest MXU-aligned block that fits VMEM and divides the padded shape."""
+    policy = get_policy(policy_name)
+    best = (128, 128, 128)
+    for bm in (512, 256, 128):
+        for bn in (512, 256, 128):
+            for bk in (512, 256, 128):
+                if vmem_bytes((bm, bn, bk), policy) > VMEM_BUDGET:
+                    continue
+                # prefer blocks that don't overshoot the problem
+                if bm <= max(M, 128) and bn <= max(N, 128) and bk <= max(K, 128):
+                    cand = (bm, bn, bk)
+                    if cand > best:
+                        best = cand
+    return best
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
+def tcec_matmul(a: jax.Array, b: jax.Array, policy: str = "tcec_bf16x6",
+                block: tuple[int, int, int] | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """FP32-accurate (M,K)@(K,N) on the bf16 MXU via the fused TCEC kernel."""
+    M, K = a.shape
+    _, N = b.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    if block is None:
+        block = pick_block(M, N, K, policy)
+    ap = _pad_to(a.astype(jnp.float32), block[0], block[2])
+    bp = _pad_to(b.astype(jnp.float32), block[2], block[1])
+    out = tcec_matmul_pallas(ap, bp, policy_name=policy, block=block,
+                             interpret=interpret)
+    return out[:M, :N]

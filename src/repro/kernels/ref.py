@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the TCEC matmul kernel.
+
+An independent, loop-free restatement of the paper's corrected GEMM
+(Eqs. 19-24 generalized to k-way bf16 splits): split both operands with RN
+casts and residual scaling, run one lp-in/f32-out dot per kept product,
+sum same-scale products in f32, fold the scaled epilogue smallest-first.
+Also provides the f64 ground-truth GEMM used by Eq. (7) residuals.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import get_policy
+
+
+def tcec_matmul_ref(a, b, policy_name: str):
+    """(M, K) @ (K, N) -> (M, N) f32 — the kernel's correctness oracle."""
+    policy = get_policy(policy_name)
+    a = jnp.asarray(a, dtype=jnp.float32)
+    b = jnp.asarray(b, dtype=jnp.float32)
+    scale = jnp.float32(2.0 ** policy.scale_bits)
+
+    def splits(x):
+        parts, r = [], x
+        for i in range(policy.n_splits):
+            p = r.astype(policy.jdtype)
+            parts.append(p)
+            if i + 1 < policy.n_splits:
+                r = (r - p.astype(jnp.float32)) * scale
+        return parts
+
+    sa, sb = splits(a), splits(b)
+    groups: dict[int, jnp.ndarray] = {}
+    for (i, j) in policy.keep:
+        t = jnp.dot(sa[i], sb[j], preferred_element_type=jnp.float32)
+        g = i + j
+        groups[g] = t if g not in groups else groups[g] + t
+    keys = sorted(groups)
+    out = groups[keys[-1]]
+    inv = jnp.float32(2.0 ** (-policy.scale_bits))
+    for g in reversed(keys[:-1]):
+        out = groups[g] + out * inv
+    return out
+
+
+def matmul_f64(a, b) -> np.ndarray:
+    """Ground truth for Eq. (7) relative residuals."""
+    return np.asarray(a, dtype=np.float64) @ np.asarray(b, dtype=np.float64)

@@ -1,0 +1,126 @@
+"""TCEC matmul Pallas kernel — the paper's CUTLASS integration, TPU-native.
+
+One fused kernel computes an FP32-accurate GEMM on the bf16 MXU:
+
+  * f32 A/B tiles stream HBM -> VMEM exactly once (same traffic as SGEMM —
+    the paper's "no extra memory footprint" property: splits are never
+    materialized to HBM, they are computed in-register per tile, mirroring
+    the paper's "compute Eq (19)-(22) on the registers" CUTLASS change);
+  * the split products run as 3 (``tcec_bf16x3``) or 6 (``tcec_bf16x6``)
+    bf16 MXU passes per tile with f32 outputs;
+  * accumulation across the K grid happens in **f32 VMEM scratch** outside
+    the MXU accumulation chain — the paper's RZ-avoidance (Fig. 6) — with
+    one scratch accumulator per scale group (Code 3's frag_c / frag_dc);
+  * the scaled epilogue folds correction groups smallest-first on the last
+    K step (Code 3's ``frag_c.x[i] += frag_dc.x[i]/2048``).
+
+Block shapes are BlockSpec parameters; MXU-aligned multiples of 128 are
+enforced by the ops.py wrapper, and the VMEM working set is checked against
+the per-core budget (the analogue of the paper's shared-memory-capacity
+filter in their CUTLASS parameter sweep).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import PrecisionPolicy, get_policy
+
+VMEM_BUDGET = 64 * 1024 * 1024  # v5e VMEM ~128MB/core; leave headroom
+
+
+def _split_tile(x, n_splits: int, scale_bits: int):
+    """In-register split of an f32 tile into bf16 terms (Eqs. 19-22)."""
+    scale = jnp.float32(2.0 ** scale_bits)
+    parts = []
+    r = x
+    for i in range(n_splits):
+        a = r.astype(jnp.bfloat16)
+        parts.append(a)
+        if i + 1 < n_splits:
+            r = (r - a.astype(jnp.float32)) * scale
+    return parts
+
+
+def _kernel(a_ref, b_ref, o_ref, *accs, policy: PrecisionPolicy, k_steps: int):
+    k = pl.program_id(2)
+    groups = sorted({i + j for (i, j) in policy.keep})
+
+    @pl.when(k == 0)
+    def _init():
+        for acc in accs:
+            acc[...] = jnp.zeros_like(acc)
+
+    a = a_ref[...]  # (bm, bk) f32
+    b = b_ref[...]  # (bk, bn) f32
+    sa = _split_tile(a, policy.n_splits, policy.scale_bits)
+    sb = _split_tile(b, policy.n_splits, policy.scale_bits)
+
+    for gi, g in enumerate(groups):
+        part = None
+        for (i, j) in policy.keep:
+            if i + j != g:
+                continue
+            t = jnp.dot(sa[i], sb[j], preferred_element_type=jnp.float32)
+            part = t if part is None else part + t
+        # f32 VMEM accumulate — outside the MXU chain (RN adds, Fig. 6)
+        accs[gi][...] += part
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        out = accs[len(groups) - 1][...]
+        inv = jnp.float32(2.0 ** (-policy.scale_bits))
+        for gi in range(len(groups) - 2, -1, -1):
+            out = accs[gi][...] + out * inv
+        o_ref[...] = out
+
+
+def vmem_bytes(block: tuple[int, int, int], policy: PrecisionPolicy) -> int:
+    """VMEM working set of one grid step (the shared-memory-capacity filter)."""
+    bm, bn, bk = block
+    groups = len({i + j for (i, j) in policy.keep})
+    tiles = (bm * bk + bk * bn) * 4                      # f32 A/B tiles
+    splits = (bm * bk + bk * bn) * 2 * policy.n_splits   # bf16 split terms
+    accs = groups * bm * bn * 4                          # f32 accumulators
+    out = bm * bn * 4
+    return tiles + splits + accs + out
+
+
+@functools.partial(jax.jit, static_argnames=("policy_name", "block", "interpret"))
+def tcec_matmul_pallas(a: jax.Array, b: jax.Array, *, policy_name: str,
+                       block: tuple[int, int, int] = (128, 128, 128),
+                       interpret: bool = False) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N) f32; dims must be multiples of ``block``."""
+    policy = get_policy(policy_name)
+    assert not policy.is_plain(), "pallas kernel is for split policies"
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bn, bk = block
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (a.shape, b.shape, block)
+    assert vmem_bytes(block, policy) <= VMEM_BUDGET, (block, policy.name)
+    grid = (M // bm, N // bn, K // bk)
+    groups = sorted({i + j for (i, j) in policy.keep})
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, policy=policy, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32) for _ in groups],
+        interpret=interpret,
+        **kwargs,
+    )(a, b)

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init. REPRO_DRYRUN_DEVICES lets tests use a small world.
+_n = os.environ.get("REPRO_DRYRUN_DEVICES")
+if _n:
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+# keep native bf16 dots in the lowered HLO: the analyzer must see the TPU
+# target's true operand bytes (see repro.core.policy._cpu_upcast_dots)
+os.environ["REPRO_KEEP_BF16_DOTS"] = "1"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell,
+record memory / FLOPs / collective-traffic evidence for EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+Without --arch, sweeps all 40 (arch x shape) cells on both meshes.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import numpy as np
+
+
+HW = {  # TPU v5e target (assignment constants)
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(type_str: str, dims_str: str) -> int:
+    n = 1
+    if dims_str:
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * _BYTES.get(type_str, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device operand bytes of every collective in partitioned HLO.
+
+    Instruction results carry their shapes inline; operand shapes are
+    resolved through a name->bytes table built from defining instructions.
+    all-reduce traffic is doubled (ring = reduce-scatter + all-gather).
+    """
+    defs: dict[str, int] = {}
+    per_op: dict[str, float] = {op: 0.0 for op in _COLL_OPS}
+    count: dict[str, int] = {op: 0 for op in _COLL_OPS}
+    inst_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+    for line in hlo_text.splitlines():
+        m = inst_re.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        shapes = _SHAPE_RE.findall(rhs.split(" ", 2)[0] if rhs else "")
+        # result may be a tuple: sum all member shapes
+        res_region = rhs.split(")")[0] if rhs.startswith("(") else \
+            rhs.split(" ")[0]
+        shapes = _SHAPE_RE.findall(res_region)
+        total = sum(_shape_bytes(t, d) for t, d in shapes)
+        defs[name] = total
+        for op in _COLL_OPS:
+            if re.search(rf"\b{op}(\.\d+)?\(", rhs) or \
+               rhs.lstrip("(").startswith(op):
+                opnds = re.findall(r"%([\w.\-]+)", rhs)
+                ob = sum(defs.get(o, 0) for o in opnds)
+                if ob == 0:
+                    ob = total
+                factor = 2.0 if op == "all-reduce" else 1.0
+                per_op[op] += factor * ob
+                count[op] += 1
+                break
+    total = sum(per_op.values())
+    return {"per_op_bytes": per_op, "counts": count,
+            "per_device_bytes": total}
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE) useful-FLOPs yardstick."""
+    from repro.launch.specs import abstract_params
+    import jax
+    params = abstract_params(cfg)
+
+    def leaf_count(tree):
+        return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(
+            jax.tree.map(lambda x: x, tree)))
+
+    n_total = leaf_count(params)
+    n_active = n_total
+    if cfg.n_experts:
+        # replace full expert count by activated experts
+        import jax.tree_util as jtu
+        expert, shared = 0, 0
+        for path, leaf in jtu.tree_flatten_with_path(params)[0]:
+            p = "/".join(str(getattr(k, "key", k)) for k in path)
+            if re.search(r"moe/w_(gate|up|down)", p):
+                expert += int(np.prod(leaf.shape))
+        active = expert * cfg.moe_top_k / cfg.n_experts
+        n_active = n_total - expert + active
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             mesh_override=None, overrides: dict | None = None) -> dict:
+    import jax
+    from repro.configs import LONG_CONTEXT_ARCHS, SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.step import lower_cell
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "status": "ok"}
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        rec["status"] = "skip"
+        rec["reason"] = ("full-attention arch: 500k decode cell skipped per "
+                        "assignment; see DESIGN.md §Arch-applicability")
+        return rec
+    mesh = mesh_override or make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    lowered, kind = lower_cell(cfg, shape_name, mesh)
+    rec["kind"] = kind
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    # XLA's own cost_analysis counts while bodies ONCE (scan undercount);
+    # keep it for reference but derive the roofline from the trip-count-
+    # aware HLO analyzer (repro.launch.hlo_cost).
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    rec["xla_cost_flops_raw"] = float(cost.get("flops", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory"] = {"error": str(e)}
+
+    from repro.launch.hlo_cost import analyze_hlo
+    hc = analyze_hlo(compiled.as_text())
+    rec["hlo_flops_per_device"] = hc["dot_flops"]
+    rec["hlo_bytes_per_device"] = hc["bytes"]
+    rec["collectives"] = {"per_op_bytes": hc["per_op_bytes"],
+                          "counts": hc["counts"],
+                          "per_device_bytes": hc["per_device_bytes"],
+                          "unknown_trip_counts": hc["unknown_trip_counts"]}
+    rec["chips"] = chips
+    rec["model_flops"] = model_flops(cfg, shape)
+
+    # roofline terms (seconds) — single-step, whole-job view
+    flops_total = rec["hlo_flops_per_device"] * chips
+    bytes_total = rec["hlo_bytes_per_device"] * chips
+    rec["roofline"] = {
+        "compute_s": flops_total / (chips * HW["peak_flops_bf16"]),
+        "memory_s": bytes_total / (chips * HW["hbm_bw"]),
+        "collective_s": hc["per_device_bytes"] / HW["ici_bw"],
+    }
+    dom = max(rec["roofline"], key=rec["roofline"].get)
+    rec["bottleneck"] = dom.replace("_s", "")
+    rec["useful_flops_ratio"] = (rec["model_flops"] / flops_total
+                                 if flops_total else 0.0)
+    # the paper's yardstick: effective-peak fraction of the dominant term
+    step_time = max(rec["roofline"].values())
+    rec["roofline_fraction"] = (rec["roofline"]["compute_s"] / step_time
+                                if step_time else 0.0)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, list_archs
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, mp)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"compile={rec['compile_s']}s "
+                             f"bottleneck={rec['bottleneck']}")
+                print(f"[{status:5s}] {tag} {extra}", flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} documented skips, "
+          f"{n_err} errors ==")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

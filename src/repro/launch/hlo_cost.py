@@ -1,0 +1,263 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+undercounts scan-over-layers models by ~L x (verified empirically — see
+EXPERIMENTS.md §Dry-run methodology). This analyzer walks the post-
+partitioning HLO text, memoizes per-computation costs, and multiplies
+while bodies by their ``known_trip_count`` backend config, giving
+per-device:
+
+  * ``dot_flops``        — 2 * prod(result dims) * prod(contracting dims)
+  * ``bytes``            — operand + result bytes of top-level instructions
+                           (fusion internals excluded: they stay on-chip)
+  * ``collective_bytes`` — per-op operand traffic, all-reduce doubled
+                           (ring = reduce-scatter + all-gather)
+
+Collectives inside scan bodies are likewise multiplied by trip count —
+the earlier flat parse undercounted those too.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+          "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+          "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_OPS = ("all-reduce-start", "all-gather-start", "all-reduce",
+             "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute-start", "collective-permute")
+_FREE_OPS = ("get-tuple-element", "tuple", "parameter", "constant",
+             "bitcast", "after-all", "partition-id", "replica-id")
+
+
+def _shape_list_bytes(text: str) -> int:
+    total = 0
+    for t, dims in _SHAPE_RE.findall(text):
+        if t not in _BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[t]
+    return total
+
+
+def _result_region(rhs: str) -> str:
+    """The result-type prefix of an instruction RHS (handles tuples)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, c in enumerate(rhs):
+            depth += c == "("
+            depth -= c == ")"
+            if depth == 0:
+                return rhs[:i + 1]
+    return rhs.split(" ")[0]
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+    unknown_trip: int = 0
+    top_coll: list = field(default_factory=list)   # (desc, bytes)
+    top_dots: list = field(default_factory=list)   # (desc, flops)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + mult * v
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        self.unknown_trip += other.unknown_trip
+        self.top_coll = sorted(
+            self.top_coll + [(d, v * mult) for d, v in other.top_coll],
+            key=lambda t: -t[1])[:24]
+        self.top_dots = sorted(
+            self.top_dots + [(d, v * mult) for d, v in other.top_dots],
+            key=lambda t: -t[1])[:24]
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[tuple[str, str, str]]] = {}
+        self.entry = None
+        self._parse(hlo_text)
+        self._memo: dict[str, Costs] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        header_re = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+        inst_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+        for line in text.splitlines():
+            s = line.rstrip()
+            if not s:
+                continue
+            hm = header_re.match(s.strip())
+            if hm and s.rstrip().endswith("{"):
+                cur = hm.group(2)
+                self.comps[cur] = []
+                if hm.group(1):
+                    self.entry = cur
+                continue
+            if s.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            im = inst_re.match(s)
+            if im:
+                name, rhs = im.groups()
+                self.comps[cur].append((name, _result_region(rhs), rhs))
+
+    # ---------------------------------------------------------------- cost
+
+    def analyze(self) -> Costs:
+        assert self.entry, "no ENTRY computation found"
+        return self._cost(self.entry)
+
+    def _cost(self, comp: str) -> Costs:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Costs()
+        shapes: dict[str, int] = {}
+        raw_shapes: dict[str, str] = {}
+        for name, res, rhs in self.comps.get(comp, []):
+            shapes[name] = _shape_list_bytes(res)
+            raw_shapes[name] = res
+            op = self._opname(rhs, res)
+            if op == "while":
+                body, cond, trip, known = self._while_parts(rhs)
+                sub = Costs()
+                if body in self.comps:
+                    sub.add(self._cost(body))
+                if cond in self.comps:
+                    sub.add(self._cost(cond))
+                if not known:
+                    sub.unknown_trip += 1
+                total.add(sub, mult=trip)
+                continue
+            if op in ("fusion", "call", "async-start"):
+                called = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", rhs)
+                if called and called.group(1) in self.comps:
+                    sub = self._cost(called.group(1))
+                    nobytes = Costs(flops=sub.flops, coll=dict(sub.coll),
+                                    coll_counts=dict(sub.coll_counts),
+                                    unknown_trip=sub.unknown_trip)
+                    total.add(nobytes)  # fusion internals stay on-chip
+                total.bytes += shapes[name] + self._operand_bytes(rhs, shapes)
+                continue
+            if op in ("dynamic-slice", "gather"):
+                total.bytes += 2 * shapes[name]   # read slice + write result
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                opnds = re.findall(r"%([\w.\-]+)", rhs[rhs.find("("):])
+                upd = shapes.get(opnds[1], 0) if len(opnds) > 1 else 0
+                total.bytes += 3 * upd            # in-place r/m/w of region
+                continue
+            if op == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations|true_computation|"
+                    r"false_computation)={?%?([\w.\-,% ]+)}?", rhs)
+                names = []
+                for b in branches:
+                    names += [x.strip().lstrip("%") for x in b.split(",")]
+                subs = [self._cost(b) for b in names if b in self.comps]
+                if subs:  # worst-case branch
+                    total.add(max(subs, key=lambda c: c.flops))
+                continue
+            coll = self._collective(op)
+            if coll:
+                ob = self._operand_bytes(rhs, shapes) or shapes[name]
+                factor = 2.0 if coll == "all-reduce" else 1.0
+                total.coll[coll] = total.coll.get(coll, 0.0) + factor * ob
+                total.coll_counts[coll] = total.coll_counts.get(coll, 0) + 1
+                total.top_coll.append((f"{coll} {res[:48]}", factor * ob))
+                continue
+            if op == "dot":
+                fl = self._dot_flops(res, rhs, raw_shapes)
+                total.flops += fl
+                total.bytes += shapes[name] + self._operand_bytes(rhs, shapes)
+                lhs_m = re.search(r"dot\(%?([\w.\-]+)", rhs)
+                lsh = raw_shapes.get(lhs_m.group(1), "?") if lhs_m else "?"
+                total.top_dots.append((f"{lsh[:40]} . -> {res[:40]}", fl))
+                continue
+            if op in _FREE_OPS:
+                continue
+            # generic instruction: result bytes only — models producer->
+            # consumer fusion on the TPU target (operands are read through
+            # the fused producer, not re-materialized from HBM)
+            total.bytes += shapes[name]
+        self._memo[comp] = total
+        return total
+
+    @staticmethod
+    def _opname(rhs: str, res: str) -> str:
+        tail = rhs[len(res):].strip()
+        m = re.match(r"([\w\-]+)", tail)
+        return m.group(1) if m else ""
+
+    @staticmethod
+    def _collective(op: str) -> str | None:
+        for c in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute"):
+            if op.startswith(c) or op.startswith(c + "-start"):
+                return c
+        return None
+
+    @staticmethod
+    def _while_parts(rhs):
+        body = re.search(r"body=%?([\w.\-]+)", rhs)
+        cond = re.search(r"condition=%?([\w.\-]+)", rhs)
+        tm = re.search(r'known_trip_count[^0-9]*"?(\d+)"?', rhs)
+        trip = int(tm.group(1)) if tm else 1
+        return (body.group(1) if body else "", cond.group(1) if cond else "",
+                trip, tm is not None)
+
+    @staticmethod
+    def _operand_bytes(rhs: str, shapes: dict[str, int]) -> int:
+        paren = rhs.find("(")
+        if paren < 0:
+            return 0
+        args = rhs[paren:].split("),")[0]
+        return sum(shapes.get(n, 0)
+                   for n in re.findall(r"%([\w.\-]+)", args))
+
+    def _dot_flops(self, res: str, rhs: str, raw_shapes: dict) -> float:
+        out_elems = 1
+        m = _SHAPE_RE.search(res)
+        if m and m.group(2):
+            for d in m.group(2).split(","):
+                out_elems *= int(d)
+        lhs_m = re.search(r"dot\(%?([\w.\-]+)", rhs)
+        cd = re.search(r"lhs_contracting_dims={([0-9,]*)}", rhs)
+        k = 1
+        if lhs_m and cd:
+            lshape = raw_shapes.get(lhs_m.group(1), "")
+            sm = _SHAPE_RE.search(lshape)
+            if sm and sm.group(2):
+                dims = [int(x) for x in sm.group(2).split(",")]
+                for idx in cd.group(1).split(","):
+                    if idx:
+                        k *= dims[int(idx)]
+        return 2.0 * out_elems * k
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    c = HloAnalyzer(hlo_text).analyze()
+    return {
+        "dot_flops": c.flops,
+        "bytes": c.bytes,
+        "per_op_bytes": c.coll,
+        "counts": c.coll_counts,
+        "per_device_bytes": sum(c.coll.values()),
+        "unknown_trip_counts": c.unknown_trip,
+        "top_collectives": c.top_coll[:12],
+        "top_dots": c.top_dots[:12],
+    }

@@ -1,0 +1,76 @@
+"""Batched serving CLI: prefill a batch of prompts, then greedy-decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models import get_model
+
+
+def generate(cfg, params, prompts, gen_len: int, greedy=True, seed=0):
+    """prompts: (B, P) int32. Prefill via decode-steps (single code path),
+    then autoregressive decode. Returns (B, gen_len)."""
+    model = get_model(cfg)
+    B, P = prompts.shape
+    max_len = P + gen_len + 1
+    cache = model.init_cache(B, max_len)
+    step = jax.jit(model.decode_step)
+
+    tok = prompts[:, 0]
+    logits = None
+    for i in range(P):
+        logits, cache = step(params, cache, prompts[:, i], i)
+    out = []
+    key = jax.random.PRNGKey(seed)
+    for i in range(gen_len):
+        if greedy:
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, :cfg.vocab_size])
+        out.append(tok)
+        logits, cache = step(params, cache, tok.astype(jnp.int32), P + i)
+    return jnp.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    if args.policy:
+        cfg = cfg.replace(policy=args.policy)
+    if cfg.family in ("vlm", "audio"):
+        print("note: serving CLI drives the LM/decoder path of this arch")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    t0 = time.time()
+    out = generate(cfg, params, prompts, args.gen)
+    dt = time.time() - t0
+    toks = args.batch * args.gen
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(out[0][:16]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Abstract input/state specs for lowering — ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ShapeConfig
+from repro.models import get_model
+from repro.optim import adamw
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg, shape: ShapeConfig | str) -> dict:
+    """Train/prefill batch stand-ins for one (arch x shape) cell."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        # the frontend stub supplies precomputed patch embeddings; total
+        # sequence (patches + text) equals the cell's seq_len
+        P = cfg.n_frontend_tokens
+        batch["tokens"] = _sds((B, S - P), jnp.int32)
+        batch["patches"] = _sds((B, P, cfg.frontend_dim), jnp.float32)
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((B, S, cfg.frontend_dim), jnp.float32)
+    if shape.kind == "prefill":
+        batch.pop("labels")
+    return batch
+
+
+def decode_specs(cfg, shape: ShapeConfig | str):
+    """(tokens, cache_index) stand-ins + abstract cache for decode cells."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["mem_len"] = max(S // 8, 64)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, **kwargs))
+    tokens = _sds((B,), jnp.int32)
+    index = _sds((), jnp.int32)
+    return tokens, index, cache
+
+
+def abstract_params(cfg):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_state(cfg, opt_cfg: adamw.OptConfig):
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda: adamw.init_state(params, opt_cfg))
+    return {"params": params, "opt": opt}

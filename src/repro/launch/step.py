@@ -1,0 +1,154 @@
+"""jit-able train / prefill / serve steps + sharding assembly for lowering."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES
+from repro.models import get_model
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel import ctx
+from . import specs as S
+
+
+def make_train_step(cfg, opt_cfg: adamw.OptConfig, num_microbatches: int = 1):
+    model = get_model(cfg)
+
+    def train_step(state, batch):
+        def loss_of(p, b):
+            return model.loss_fn(p, b)
+
+        if num_microbatches > 1:
+            # gradient accumulation: scan over microbatches (leading split)
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((num_microbatches,
+                                         x.shape[0] // num_microbatches)
+                                        + x.shape[1:]), b)
+
+            def acc_fn(carry, mb):
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    state["params"], mb)
+                return jax.tree.map(jnp.add, carry, g), (l, m)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            grads, (losses, metrics) = jax.lax.scan(
+                acc_fn, zero, micro(batch))
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(state["params"], batch)
+        new_params, new_opt, om = adamw.apply_updates(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics.update(om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.forward_logits(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens, cache_index):
+        return model.decode_step(params, cache, tokens, cache_index)
+
+    return serve_step
+
+
+# ------------------------------------------------------------- lowering
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(cfg, shape_name: str, mesh, opt_cfg=None):
+    """Lower one (arch x shape x mesh) cell; returns (lowered, kind)."""
+    shape = SHAPES[shape_name]
+    opt_cfg = opt_cfg or adamw.OptConfig(
+        moment_dtype=("bfloat16" if cfg.shard_mode == "fsdp_tp"
+                      else "float32"),
+        factored_v=(cfg.shard_mode == "fsdp_tp"))
+
+    if shape.kind == "train":
+        state_abs = S.abstract_state(cfg, opt_cfg)
+        pspec = shd.param_specs(state_abs["params"], mesh, cfg)
+        state_spec = {"params": pspec, "opt": _opt_specs(state_abs["opt"],
+                                                         pspec)}
+        batch_abs = S.input_specs(cfg, shape)
+        bspec = shd.batch_specs(cfg, mesh, batch_abs)
+        step_fn = make_train_step(cfg, opt_cfg)
+        with ctx.use_mesh(mesh, shd.batch_axes(cfg, mesh)):
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(_ns(mesh, state_spec), _ns(mesh, bspec)),
+                out_shardings=(_ns(mesh, state_spec), None),
+                donate_argnums=(0,),
+            ).lower(state_abs, batch_abs)
+        return lowered, "train"
+
+    if shape.kind == "prefill":
+        params_abs = S.abstract_params(cfg)
+        pspec = shd.param_specs(params_abs, mesh, cfg)
+        batch_abs = S.input_specs(cfg, shape)
+        bspec = shd.batch_specs(cfg, mesh, batch_abs)
+        out_spec = P(shd.dp_axes(mesh), None, "model")
+        with ctx.use_mesh(mesh, shd.batch_axes(cfg, mesh)):
+            lowered = jax.jit(
+                make_prefill_step(cfg),
+                in_shardings=(_ns(mesh, pspec), _ns(mesh, bspec)),
+                out_shardings=NamedSharding(mesh, out_spec),
+            ).lower(params_abs, batch_abs)
+        return lowered, "prefill"
+
+    # decode
+    params_abs = S.abstract_params(cfg)
+    pspec = shd.param_specs(params_abs, mesh, cfg)
+    tokens, index, cache_abs = S.decode_specs(cfg, shape)
+    cspec = shd.cache_specs(cfg, mesh, cache_abs, shape.global_batch,
+                            shape.seq_len)
+    tspec = (P(shd.dp_axes(mesh))
+             if shape.global_batch % shd.data_size(mesh) == 0 else P())
+    with ctx.use_mesh(mesh, shd.batch_axes(cfg, mesh)):
+        lowered = jax.jit(
+            make_serve_step(cfg),
+            in_shardings=(_ns(mesh, pspec), _ns(mesh, cspec),
+                          NamedSharding(mesh, tspec), NamedSharding(mesh, P())),
+            out_shardings=(None, _ns(mesh, cspec)),
+            donate_argnums=(1,),
+        ).lower(params_abs, cache_abs, tokens, index)
+    return lowered, "decode"
+
+
+def _opt_specs(opt_abs, pspec):
+    """Optimizer-state specs mirror the param specs; factored-v stats drop
+    the corresponding param dim from the spec; step is replicated."""
+    def mk_v(p_spec, v_leaf):
+        if isinstance(v_leaf, dict):  # factored second moment
+            dims = list(p_spec) + [None] * (
+                len(v_leaf["row"].shape) + 1 - len(list(p_spec)))
+            return {"row": P(*dims[:-1]),
+                    "col": P(*(dims[:-2] + dims[-1:]))}
+        return p_spec
+
+    return {
+        "m": pspec,
+        "v": jax.tree.map(mk_v, pspec, opt_abs["v"],
+                          is_leaf=lambda x: isinstance(x, P)),
+        "step": P(),
+    }

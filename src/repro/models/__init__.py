@@ -1,0 +1,5 @@
+"""Model zoo: dense/MoE/SSM/hybrid/enc-dec/VLM families, all routing every
+contraction through the paper's TCEC precision policy."""
+from .api import get_model
+
+__all__ = ["get_model"]

@@ -1,0 +1,33 @@
+"""Family-dispatched model API: init / loss_fn / init_cache / decode_step.
+
+Every family exposes the same four entry points, so the trainer, server,
+dry-run, and benchmarks are family-agnostic."""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from . import encdec_lm, hybrid_lm, lm, ssm_lm, vlm_lm
+
+_FAMILIES = {
+    "dense": lm,
+    "moe": lm,
+    "ssm": ssm_lm,
+    "hybrid": hybrid_lm,
+    "audio": encdec_lm,
+    "vlm": vlm_lm,
+}
+
+
+def get_model(cfg) -> SimpleNamespace:
+    mod = _FAMILIES[cfg.family]
+    return SimpleNamespace(
+        init=lambda key: mod.init(cfg, key),
+        loss_fn=lambda params, batch: mod.loss_fn(params, batch, cfg),
+        forward_logits=lambda params, batch: mod.forward_logits(
+            params, batch, cfg),
+        init_cache=lambda batch, max_len, **kw: mod.init_cache(
+            cfg, batch, max_len, **kw),
+        decode_step=lambda params, cache, tokens, idx: mod.decode_step(
+            params, cfg, cache, tokens, idx),
+        module=mod,
+    )

@@ -1,0 +1,172 @@
+"""Encoder-decoder transformer (Seamless-M4T style). The speech frontend is
+a STUB per the assignment: ``batch["frames"]`` carries precomputed frame
+embeddings; the encoder, decoder, and cross-attention are real."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pdot
+from . import layers as L
+from .lm import cross_entropy, embed, unembed_logits
+from .modules import dense_init, embed_init, split_keys, stack_init, zeros
+
+
+def _xattn_init(key, cfg):
+    return L.attn_init(key, cfg)
+
+
+def _enc_layer_init(key, cfg):
+    ks = split_keys(key, 2)
+    return {"ln1": zeros((cfg.d_model,)), "attn": L.attn_init(ks[0], cfg),
+            "ln2": zeros((cfg.d_model,)), "mlp": L.mlp_init(ks[1], cfg)}
+
+
+def _dec_layer_init(key, cfg):
+    ks = split_keys(key, 3)
+    return {"ln1": zeros((cfg.d_model,)), "attn": L.attn_init(ks[0], cfg),
+            "lnx": zeros((cfg.d_model,)), "xattn": _xattn_init(ks[1], cfg),
+            "ln2": zeros((cfg.d_model,)), "mlp": L.mlp_init(ks[2], cfg)}
+
+
+def init(cfg, key):
+    ks = split_keys(key, 5)
+    return {
+        "frontend_proj": dense_init(ks[0], (cfg.frontend_dim, cfg.d_model),
+                                    fan_in=cfg.frontend_dim),
+        "enc_blocks": stack_init(lambda k: _enc_layer_init(k, cfg), ks[1],
+                                 cfg.n_enc_layers),
+        "enc_ln_f": zeros((cfg.d_model,)),
+        "embed": embed_init(ks[2], (cfg.padded_vocab, cfg.d_model)),
+        "dec_blocks": stack_init(lambda k: _dec_layer_init(k, cfg), ks[3],
+                                 cfg.n_layers),
+        "ln_f": zeros((cfg.d_model,)),
+        "unembed": dense_init(ks[4], (cfg.d_model, cfg.padded_vocab),
+                              fan_in=cfg.d_model),
+    }
+
+
+def _cross_attention(p, x, mem_k, mem_v, cfg):
+    """Cross-attention; q from decoder, K/V precomputed from encoder memory.
+    Context-parallel like self-attention: q-sequence shards on model."""
+    from repro.parallel import ctx
+    q = pdot("bsd,dhk->bshk", x, p["wq"], cfg.policy)
+    B, S, H, hd = q.shape
+    Hkv, hdv = mem_k.shape[2], mem_v.shape[3]
+    rep = H // Hkv
+    qg = q.reshape(B, S, Hkv, rep, hd)
+    qg = ctx.constrain(qg, ctx.dp_axes(), "model", None, None, None)
+    s = pdot("bqhrd,bkhd->bhrqk", qg, mem_k, cfg.mix_policy) / np.sqrt(hd)
+    s = ctx.constrain(s, ctx.dp_axes(), None, None, "model", None)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = pdot("bhrqk,bkhd->bqhrd", pr, mem_v, cfg.mix_policy)
+    o = ctx.constrain(o, ctx.dp_axes(), None, None, "model", None)
+    o = o.reshape(B, S, H, hdv)
+    return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+
+
+def _mem_kv(p, mem, cfg):
+    k = pdot("bsd,dhk->bshk", mem, p["wk"], cfg.policy)
+    v = pdot("bsd,dhk->bshk", mem, p["wv"], cfg.policy)
+    return k, v
+
+
+def encode(params, frames, cfg):
+    x = pdot("bsf,fd->bsd", frames.astype(jnp.float32),
+             params["frontend_proj"], cfg.policy)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, lp):
+        h = L.rmsnorm(lp["ln1"], carry, cfg.norm_eps)
+        x1 = carry + L.attention(lp["attn"], h, cfg, positions, causal=False)
+        h = L.rmsnorm(lp["ln2"], x1, cfg.norm_eps)
+        return x1 + L.mlp(lp["mlp"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def decode_train(params, tokens, mem, cfg):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = embed(params, tokens, cfg)
+
+    def body(carry, lp):
+        h = L.rmsnorm(lp["ln1"], carry, cfg.norm_eps)
+        x1 = carry + L.attention(lp["attn"], h, cfg, positions, causal=True)
+        h = L.rmsnorm(lp["lnx"], x1, cfg.norm_eps)
+        mk, mv = _mem_kv(lp["xattn"], mem, cfg)
+        x2 = x1 + _cross_attention(lp["xattn"], h, mk, mv, cfg)
+        h = L.rmsnorm(lp["ln2"], x2, cfg.norm_eps)
+        return x2 + L.mlp(lp["mlp"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg):
+    mem = encode(params, batch["frames"], cfg)
+    x = decode_train(params, batch["tokens"], mem, cfg)
+    logits = unembed_logits(params, x, cfg)
+    loss, denom = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss, "lm_loss": loss, "tokens": denom}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               mem_len: int | None = None):
+    """Self KV per decoder layer + precomputed cross K/V over the memory."""
+    mem_len = mem_len or max(max_len // 8, 64)
+    kv = lambda T: {  # noqa: E731
+        "k": jnp.zeros((cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.head_dim),
+                       dtype)}
+    return {"self": kv(max_len), "cross": kv(mem_len)}
+
+
+def prefill_cross(params, frames, cfg, cache):
+    """Run the encoder once and fill the cross-attention K/V cache."""
+    mem = encode(params, frames, cfg)
+
+    def body(_, lp):
+        mk, mv = _mem_kv(lp["xattn"], mem, cfg)
+        return None, {"k": mk.astype(jnp.bfloat16),
+                      "v": mv.astype(jnp.bfloat16)}
+
+    _, cross = jax.lax.scan(body, None, params["dec_blocks"])
+    return {"self": cache["self"], "cross": cross}
+
+
+def decode_step(params, cfg, cache, tokens, cache_index):
+    x = embed(params, tokens[:, None], cfg)
+
+    def body(carry, xs):
+        lp, selfc, crossc = xs
+        h = L.rmsnorm(lp["ln1"], carry, cfg.norm_eps)
+        a, nself = L.attention_decode(lp["attn"], h, cfg, selfc, cache_index)
+        x1 = carry + a
+        h = L.rmsnorm(lp["lnx"], x1, cfg.norm_eps)
+        x2 = x1 + _cross_attention(lp["xattn"], h,
+                                   crossc["k"].astype(jnp.float32),
+                                   crossc["v"].astype(jnp.float32), cfg)
+        h = L.rmsnorm(lp["ln2"], x2, cfg.norm_eps)
+        return x2 + L.mlp(lp["mlp"], h, cfg), nself
+
+    x, nself = jax.lax.scan(body, x, (params["dec_blocks"], cache["self"],
+                                      cache["cross"]))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed_logits(params, x, cfg)
+    return logits[:, 0], {"self": nself, "cross": cache["cross"]}
+
+
+def forward_logits(params, batch, cfg):
+    """Prefill entry: logits only (serving-side forward)."""
+    mem = encode(params, batch["frames"], cfg)
+    x = decode_train(params, batch["tokens"], mem, cfg)
+    return unembed_logits(params, x, cfg)

@@ -1,0 +1,156 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a *shared* (weight-tied)
+attention+MLP block applied every ``cfg.attn_every`` layers on
+concat(hidden, original embedding) — the Zamba parameter-reuse trick."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pdot
+from . import layers as L
+from . import ssd
+from .lm import cross_entropy, embed, unembed_logits
+from .modules import dense_init, embed_init, split_keys, stack_init, zeros
+
+
+def _mamba_layer_init(key, cfg):
+    return {"ln": zeros((cfg.d_model,)), "ssd": ssd.ssd_init(key, cfg)}
+
+
+def _shared_block_init(key, cfg):
+    D = cfg.d_model
+    ks = split_keys(key, 4)
+    return {
+        "w_cat": dense_init(ks[0], (2 * D, D), fan_in=2 * D),
+        "ln1": zeros((D,)),
+        "attn": L.attn_init(ks[1], cfg),
+        "ln2": zeros((D,)),
+        "mlp": L.mlp_init(ks[2], cfg),
+        "w_out": dense_init(ks[3], (D, D), fan_in=D),
+    }
+
+
+def group_sizes(cfg):
+    """Layer groups: shared attn block applied after each full group."""
+    n, g = cfg.n_layers, cfg.attn_every
+    sizes = [g] * (n // g)
+    if n % g:
+        sizes.append(n % g)
+    n_apps = n // g
+    return sizes, n_apps
+
+
+def init(cfg, key):
+    ks = split_keys(key, 4)
+    params = {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+        "blocks": stack_init(lambda k: _mamba_layer_init(k, cfg), ks[1],
+                             cfg.n_layers),
+        "shared": _shared_block_init(ks[2], cfg),
+        "ln_f": zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[3], (cfg.d_model, cfg.padded_vocab),
+                                       fan_in=cfg.d_model)
+    return params
+
+
+def _shared_apply(sp, x, emb, cfg, positions):
+    u = pdot("bsd,de->bse", jnp.concatenate([x, emb], axis=-1),
+             sp["w_cat"], cfg.policy)
+    h = L.rmsnorm(sp["ln1"], u, cfg.norm_eps)
+    u = u + L.attention(sp["attn"], h, cfg, positions, causal=True)
+    h = L.rmsnorm(sp["ln2"], u, cfg.norm_eps)
+    u = u + L.mlp(sp["mlp"], h, cfg)
+    return x + pdot("bsd,de->bse", u, sp["w_out"], cfg.policy)
+
+
+def _shared_decode(sp, x, emb, cfg, cache, cache_index):
+    u = pdot("bsd,de->bse", jnp.concatenate([x, emb], axis=-1),
+             sp["w_cat"], cfg.policy)
+    h = L.rmsnorm(sp["ln1"], u, cfg.norm_eps)
+    a, new_cache = L.attention_decode(sp["attn"], h, cfg, cache, cache_index)
+    u = u + a
+    h = L.rmsnorm(sp["ln2"], u, cfg.norm_eps)
+    u = u + L.mlp(sp["mlp"], h, cfg)
+    return x + pdot("bsd,de->bse", u, sp["w_out"], cfg.policy), new_cache
+
+
+def backbone(params, tokens, cfg):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    emb = embed(params, tokens, cfg)
+    x = emb
+    sizes, n_apps = group_sizes(cfg)
+
+    def body(carry, lp):
+        h = L.rmsnorm(lp["ln"], carry, cfg.norm_eps)
+        return carry + ssd.ssd_layer(lp["ssd"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    off = 0
+    for gi, gs in enumerate(sizes):
+        grp = jax.tree.map(lambda a: a[off:off + gs], params["blocks"])
+        x, _ = jax.lax.scan(body, x, grp)
+        off += gs
+        if gi < n_apps:
+            x = _shared_apply(params["shared"], x, emb, cfg, positions)
+    return L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg):
+    x = backbone(params, batch["tokens"], cfg)
+    logits = unembed_logits(params, x, cfg)
+    loss, denom = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss, "lm_loss": loss, "tokens": denom}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    _, n_apps = group_sizes(cfg)
+    mamba = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(),
+        ssd.ssd_init_cache(cfg, batch))
+    kv = {"k": jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads,
+                          cfg.head_dim), dtype),
+          "v": jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads,
+                          cfg.head_dim), dtype)}
+    return {"mamba": mamba, "shared_kv": kv}
+
+
+def decode_step(params, cfg, cache, tokens, cache_index):
+    x = embed(params, tokens[:, None], cfg)
+    emb = x
+    sizes, n_apps = group_sizes(cfg)
+
+    def body(carry, xs):
+        lp, c = xs
+        h = L.rmsnorm(lp["ln"], carry, cfg.norm_eps)
+        o, nc = ssd.ssd_decode(lp["ssd"], h, cfg, c)
+        return carry + o, nc
+
+    new_mamba, new_kv = [], []
+    off = 0
+    for gi, gs in enumerate(sizes):
+        grp = jax.tree.map(lambda a: a[off:off + gs], params["blocks"])
+        cgrp = jax.tree.map(lambda a: a[off:off + gs], cache["mamba"])
+        x, nc = jax.lax.scan(body, x, (grp, cgrp))
+        new_mamba.append(nc)
+        off += gs
+        if gi < n_apps:
+            kv = jax.tree.map(lambda a: a[gi], cache["shared_kv"])
+            x, nkv = _shared_decode(params["shared"], x, emb, cfg, kv,
+                                    cache_index)
+            new_kv.append(nkv)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed_logits(params, x, cfg)
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
+        "shared_kv": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_kv),
+    }
+    return logits[:, 0], new_cache
+
+
+def forward_logits(params, batch, cfg):
+    """Prefill entry: logits only (serving-side forward)."""
+    return unembed_logits(params, backbone(params, batch["tokens"], cfg), cfg)

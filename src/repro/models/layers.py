@@ -1,0 +1,311 @@
+"""Shared neural layers. Every contraction routes through repro.core.pdot,
+so the paper's error-corrected GEMM is a config knob for the whole zoo."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pdot
+from .modules import dense_init, ones, split_keys, zeros
+
+NEG_INF = -2.0e38
+
+
+# ------------------------------------------------------------------ norms
+
+def rmsnorm(scale, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+
+
+def layernorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+# ------------------------------------------------------------------- rope
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ------------------------------------------------------------- attention
+
+def attn_init(key, cfg):
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, hd), fan_in=D),
+        "wk": dense_init(ks[1], (D, Hkv, hd), fan_in=D),
+        "wv": dense_init(ks[2], (D, Hkv, hd), fan_in=D),
+        "wo": dense_init(ks[3], (H, hd, D), fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((H, hd))
+        p["bk"] = zeros((Hkv, hd))
+        p["bv"] = zeros((Hkv, hd))
+    if cfg.qk_norm:
+        p["q_norm"] = zeros((hd,))
+        p["k_norm"] = zeros((hd,))
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    pol = cfg.policy
+    q = pdot("bsd,dhk->bshk", x, p["wq"], pol)
+    k = pdot("bsd,dhk->bshk", x, p["wk"], pol)
+    v = pdot("bsd,dhk->bshk", x, p["wv"], pol)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window):
+    """Additive mask from position vectors. window may be a traced scalar
+    (0 = unlimited) so local/global layers share one scanned code path."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = (d >= 0) if causal else jnp.ones_like(d, dtype=bool)
+    ok &= jnp.where(window > 0, d < window, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def mha(q, k, v, cfg, q_pos, k_pos, causal=True, window=0):
+    """Materialized-scores attention (short sequences).
+
+    q: (B, S, H, d); k/v: (B, T, Hkv, d). GQA via head grouping — no KV
+    repetition is materialized."""
+    from repro.parallel import ctx
+    B, S, H, hd = q.shape
+    Hkv, hdv = k.shape[2], v.shape[3]
+    rep = H // Hkv
+    qg = q.reshape(B, S, Hkv, rep, hd)
+    # context parallelism: shard the q-sequence on the model axis so the
+    # S x S score block shrinks 16x per device regardless of kv-head count
+    qg = ctx.constrain(qg, ctx.dp_axes(), "model", None, None, None)
+    scores = pdot("bqhrd,bkhd->bhrqk", qg, k, cfg.mix_policy)
+    scores = ctx.constrain(scores, ctx.dp_axes(), None, None, "model", None)
+    scores = scores / np.sqrt(hd)
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = scores + _mask_bias(q_pos[0], k_pos[0], causal, window)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = pdot("bhrqk,bkhd->bqhrd", probs, v, cfg.mix_policy)
+    out = ctx.constrain(out, ctx.dp_axes(), None, None, "model", None)
+    return out.reshape(B, S, H, hdv)
+
+
+def blocked_attention(q, k, v, cfg, q_pos, k_pos, causal=True, window=0,
+                      q_chunk=2048, k_chunk=2048):
+    """Flash-style attention: O(S·chunk) memory, online softmax over KV
+    blocks — required for the 32k prefill cells."""
+    B, S, H, hd = q.shape
+    T, Hkv, hdv = k.shape[1], k.shape[2], v.shape[3]
+    rep = H // Hkv
+    nq, nk = S // q_chunk, T // k_chunk
+    assert S % q_chunk == 0 and T % k_chunk == 0, (S, T, q_chunk, k_chunk)
+    qg = q.reshape(B, nq, q_chunk, Hkv, rep, hd)
+    kg = k.reshape(B, nk, k_chunk, Hkv, hd)
+    vg = v.reshape(B, nk, k_chunk, Hkv, hdv)
+    qp = q_pos[0].reshape(nq, q_chunk)
+    kp = k_pos[0].reshape(nk, k_chunk)
+    scale = 1.0 / np.sqrt(hd)
+
+    from repro.parallel import ctx
+
+    def q_block(qi):
+        qblk = qg[:, qi]                     # (B, qc, Hkv, rep, hd)
+        qblk = ctx.constrain(qblk, ctx.dp_axes(), "model", None, None, None)
+        qpos = qp[qi]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            s = pdot("bqhrd,bkhd->bhrqk", qblk, kg[:, ki],
+                     cfg.mix_policy) * scale
+            s = ctx.constrain(s, ctx.dp_axes(), None, None, "model", None)
+            s = softcap(s, cfg.attn_softcap)
+            s = s + _mask_bias(qpos, kp[ki], causal, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = pdot("bhrqk,bkhd->bhrqd", p, vg[:, ki], cfg.mix_policy)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, q_chunk, hdv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,Hkv,rep,qc,hdv)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))        # (B,qc,Hkv,rep,hdv)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))            # (nq,B,qc,Hkv,rep,hdv)
+    out = jnp.transpose(out, (1, 0, 2, 3, 4, 5)).reshape(B, S, H, hdv)
+    return out
+
+
+ATTN_BLOCK_THRESHOLD = 8192
+
+
+def attention(p, x, cfg, positions, causal=True, window=0):
+    """Full attention layer: qkv -> (blocked) sdpa -> out projection."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    if S >= ATTN_BLOCK_THRESHOLD:
+        o = blocked_attention(q, k, v, cfg, positions, positions, causal, window)
+    else:
+        o = mha(q, k, v, cfg, positions, positions, causal, window)
+    return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+
+
+def attention_decode(p, x, cfg, cache, cache_index, window=0):
+    """One-token decode against a (B, T, Hkv, d) KV cache."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_index, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, cache_index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, cache_index, 0, 0))
+    T, Hkv = ck.shape[1], ck.shape[2]
+    H, hd = q.shape[2], q.shape[3]
+    rep = H // Hkv
+    qg = q.reshape(B, 1, Hkv, rep, hd)
+    # cache dots run in bf16: the cache is already bf16 (splitting it is
+    # pointless — the residual is exactly zero) and f32 upcasts would copy
+    # the whole cache per step
+    s = pdot("bqhrd,bkhd->bhrqk", qg, ck, "bf16")
+    s = softcap(s / np.sqrt(hd), cfg.attn_softcap)
+    kpos = jnp.arange(T)
+    valid = kpos <= cache_index
+    valid &= jnp.where(window > 0, cache_index - kpos < window, True)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = pdot("bhrqk,bkhd->bqhrd", pr, cv, "bf16")
+    o = o.reshape(B, 1, H, hd)
+    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    return out, {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------------- MLP
+
+def mlp_init(key, cfg, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (D, F), fan_in=D),
+        "w_up": dense_init(ks[1], (D, F), fan_in=D),
+        "w_down": dense_init(ks[2], (F, D), fan_in=F),
+    }
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def mlp(p, x, cfg):
+    g = pdot("bsd,df->bsf", x, p["w_gate"], cfg.policy)
+    u = pdot("bsd,df->bsf", x, p["w_up"], cfg.policy)
+    h = _act(g, cfg.activation) * u
+    return pdot("bsf,fd->bsd", h, p["w_down"], cfg.policy)
+
+
+# ------------------------------------------------------------------- MoE
+
+def moe_init(key, cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), fan_in=D),
+        "w_gate": dense_init(ks[1], (E, D, F), fan_in=D),
+        "w_up": dense_init(ks[2], (E, D, F), fan_in=D),
+        "w_down": dense_init(ks[3], (E, F, D), fan_in=F),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe(p, x, cfg):
+    """GShard-style top-k MoE with capacity + one-hot dispatch einsums.
+
+    Token groups of ``cfg.moe_groups`` bound the dispatch-tensor size and the
+    dispatch-FLOPs overhead (~gs*cf/3F of expert FLOPs; see DESIGN.md)."""
+    B, S, D = x.shape
+    E, K, F = cfg.n_experts, cfg.moe_top_k, cfg.moe_d_ff
+    N = B * S
+    gs = min(cfg.moe_groups, N)
+    while N % gs:            # largest divisor <= target (MTP runs S-1)
+        gs -= 1
+    G = N // gs
+    xg = x.reshape(G, gs, D)
+
+    logits = pdot("gsd,de->gse", xg, p["router"], "fp32")
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(gates, K)                  # (G, gs, K)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    C = int(np.ceil(gs * K / E * cfg.capacity_factor / 4) * 4)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)   # (G, gs, K, E)
+    flat = onehot.reshape(G, gs * K, E)
+    # position-within-expert over (s, k) slot order. associative_scan, NOT
+    # jnp.cumsum: XLA lowers big cumsums to a triangular matmul whose fake
+    # FLOPs would dwarf the expert GEMMs (log-depth adds instead).
+    pos = jax.lax.associative_scan(jnp.add, flat, axis=1)
+    pos_t = ((pos - 1.0) * flat).sum(-1).reshape(G, gs, K)
+    keep = (pos_t < C).astype(jnp.bfloat16)               # (G, gs, K)
+    posc = jnp.clip(pos_t, 0, C - 1).astype(jnp.int32)
+    oh_c = jax.nn.one_hot(posc, C, dtype=jnp.bfloat16)    # (G, gs, K, C)
+    oh_e = onehot.astype(jnp.bfloat16)                    # (G, gs, K, E)
+    # K-unrolled outer products: only (G, gs, E, C) accumulators live —
+    # never a K-expanded (G, gs, K, E, C) tensor.
+    dispatch = jnp.zeros((G, gs, E, C), jnp.bfloat16)
+    combine = jnp.zeros((G, gs, E, C), jnp.bfloat16)
+    for k in range(K):
+        t = (oh_e[:, :, k, :, None] * oh_c[:, :, k, None, :]
+             * keep[:, :, k, None, None])
+        dispatch = dispatch + t
+        combine = combine + t * topv[:, :, k, None, None].astype(jnp.bfloat16)
+
+    xe = pdot("gsec,gsd->gecd", dispatch,
+              xg.astype(jnp.bfloat16), "bf16")            # all-to-all under EP
+    hg = pdot("gecd,edf->gecf", xe, p["w_gate"], cfg.policy)
+    hu = pdot("gecd,edf->gecf", xe, p["w_up"], cfg.policy)
+    he = _act(hg, cfg.activation) * hu
+    ye = pdot("gecf,efd->gecd", he, p["w_down"], cfg.policy)
+    y = pdot("gsec,gecd->gsd", combine,
+             ye.astype(jnp.bfloat16), "bf16")
+    y = y.reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg)
+    # load-balancing auxiliary (GShard aux loss), returned for training
+    me = jnp.mean(gates, axis=(0, 1))
+    ce = jnp.mean(onehot.sum(2), axis=(0, 1))
+    aux = jnp.sum(me * ce) * E
+    return y, aux

@@ -1,0 +1,106 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) with low-rank Q/KV
+compression, decoupled RoPE keys, and compressed-cache decode (the
+"absorb" formulation) — the KV cache stores only (c_kv, k_rope)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pdot
+from .modules import dense_init, split_keys, zeros
+from .layers import (blocked_attention, mha, rmsnorm, rope,
+                     ATTN_BLOCK_THRESHOLD, NEG_INF)
+
+
+def mla_init(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = split_keys(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (D, qr), fan_in=D),
+        "q_norm": zeros((qr,)),
+        "w_uq": dense_init(ks[1], (qr, H, dn + dr), fan_in=qr),
+        "w_dkv": dense_init(ks[2], (D, kvr), fan_in=D),
+        "kv_norm": zeros((kvr,)),
+        "w_uk": dense_init(ks[3], (kvr, H, dn), fan_in=kvr),
+        "w_uv": dense_init(ks[4], (kvr, H, dv), fan_in=kvr),
+        "w_kr": dense_init(ks[5], (D, dr), fan_in=D),
+        "wo": dense_init(ks[6], (H, dv, D), fan_in=H * dv),
+    }
+
+
+def _q_proj(p, x, cfg, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(p["q_norm"], pdot("bsd,dr->bsr", x, p["w_dq"], cfg.policy),
+                 cfg.norm_eps)
+    q = pdot("bsr,rhk->bshk", cq, p["w_uq"], cfg.policy)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_compress(p, x, cfg, positions):
+    c_kv = rmsnorm(p["kv_norm"],
+                   pdot("bsd,dr->bsr", x, p["w_dkv"], cfg.policy),
+                   cfg.norm_eps)
+    k_rope = pdot("bsd,dk->bsk", x, p["w_kr"], cfg.policy)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(p, x, cfg, positions):
+    """Prefill/train path: decompress K/V, run (blocked) attention."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    c_kv, k_rope = _kv_compress(p, x, cfg, positions)
+    k_nope = pdot("bsr,rhk->bshk", c_kv, p["w_uk"], cfg.policy)
+    v = pdot("bsr,rhk->bshk", c_kv, p["w_uv"], cfg.policy)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+        axis=-1)
+    if S >= ATTN_BLOCK_THRESHOLD:
+        o = blocked_attention(q, k, v, cfg, positions, positions, causal=True)
+    else:
+        o = mha(q, k, v, cfg, positions, positions, causal=True)
+    return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cfg, cache, cache_index):
+    """Absorbed decode: attention runs in the compressed (kv_lora) space;
+    cache traffic is (kv_lora + rope_dim) per token instead of 2*H*d."""
+    B = x.shape[0]
+    H, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    positions = jnp.full((B, 1), cache_index, dtype=jnp.int32)
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    c_kv_t, k_rope_t = _kv_compress(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), (0, cache_index, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype),
+        (0, cache_index, 0))
+    # absorb W_uk into the query: q_c = q_nope @ W_uk  -> compressed space
+    q_c = pdot("bshk,rhk->bshr", q_nope, p["w_uk"], cfg.policy)  # (B,1,H,kvr)
+    s_c = pdot("bshr,btr->bhst", q_c, ck, "bf16")    # bf16 cache dots:
+    s_r = pdot("bshk,btk->bhst", q_rope, kr, "bf16") # no f32 cache copies
+    s = (s_c + s_r) / np.sqrt(dn + dr)
+    T = ck.shape[1]
+    valid = jnp.arange(T) <= cache_index
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    ctx = pdot("bhst,btr->bshr", pr, ck, "bf16")
+    o = pdot("bshr,rhk->bshk", ctx, p["w_uv"], cfg.policy)       # (B,1,H,dv)
+    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    return out, {"c_kv": ck, "k_rope": kr}

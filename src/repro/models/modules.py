@@ -1,0 +1,39 @@
+"""Minimal pytree parameter helpers (no flax — params are nested dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, fan_in: int | None = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype=dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def stack_init(init_fn, key, n: int):
+    """Initialize ``n`` layer param trees and stack leaves on a leading dim
+    (the scan-over-layers layout: O(1) HLO size for any depth)."""
+    trees = [init_fn(k) for k in jax.random.split(key, n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

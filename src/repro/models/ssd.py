@@ -1,0 +1,195 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked matmul formulation.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) recasts the selective-SSM
+recurrence as chunk-local matmuls plus a tiny inter-chunk state scan, which
+makes it MXU-friendly — and every chunk matmul here routes through the
+paper's TCEC policy via ``pdot``, so the error-corrected GEMM covers the
+SSM family too (DESIGN.md §Arch-applicability).
+
+Memory discipline: the sequence is processed with ``lax.scan`` over chunks
+(one (B, H, Q, Q) score block live at a time) and all head-group expansions
+use reshapes H = G x rep instead of materialized repeats.
+
+Sharding discipline: the input projection is stored as separate z / x / B /
+C / dt tensors (not one fused matrix) so each output dim shards cleanly on
+the ``model`` axis without split-at-unaligned-boundary resharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pdot
+from .modules import dense_init, split_keys, zeros
+from .layers import rmsnorm
+
+
+def ssd_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def ssd_init(key, cfg):
+    D = cfg.d_model
+    d_inner, H = ssd_dims(cfg)
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    ks = split_keys(key, 9)
+    return {
+        "wz": dense_init(ks[8], (D, d_inner), fan_in=D),
+        "wx": dense_init(ks[1], (D, d_inner), fan_in=D),
+        "wb": dense_init(ks[2], (D, G * N), fan_in=D),
+        "wc": dense_init(ks[3], (D, G * N), fan_in=D),
+        "wdt": dense_init(ks[4], (D, H), fan_in=D),
+        "conv_x": dense_init(ks[5], (cfg.ssm_conv, d_inner), fan_in=cfg.ssm_conv),
+        "conv_b": dense_init(ks[6], (cfg.ssm_conv, G * N), fan_in=cfg.ssm_conv),
+        "conv_c": dense_init(ks[7], (cfg.ssm_conv, G * N), fan_in=cfg.ssm_conv),
+        "conv_bias_x": zeros((d_inner,)),
+        "conv_bias_b": zeros((G * N,)),
+        "conv_bias_c": zeros((G * N,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D_skip": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2))),  # softplus^-1
+        "norm": zeros((d_inner,)),
+        "w_out": dense_init(ks[0], (d_inner, D), fan_in=d_inner),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width K: y_t = sum_k x_{t-K+1+k} * w_k."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    return jax.nn.silu(y + b)
+
+
+def _project(p, x, cfg):
+    z = pdot("bsd,de->bse", x, p["wz"], cfg.policy)
+    xs = pdot("bsd,de->bse", x, p["wx"], cfg.policy)
+    Bm = pdot("bsd,de->bse", x, p["wb"], cfg.policy)
+    Cm = pdot("bsd,de->bse", x, p["wc"], cfg.policy)
+    dt = pdot("bsd,de->bse", x, p["wdt"], cfg.policy)
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_layer(p, x, cfg):
+    """Train/prefill path. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    d_inner, H = ssd_dims(cfg)
+    G, N, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    rep = H // G
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    pol = cfg.mix_policy
+
+    z, xs, Bm, Cm, dt = _project(p, x, cfg)
+    xs = _causal_conv(xs, p["conv_x"], p["conv_bias_x"])
+    Bm = _causal_conv(Bm, p["conv_b"], p["conv_bias_b"])
+    Cm = _causal_conv(Cm, p["conv_c"], p["conv_bias_c"])
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,) < 0
+    dts = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xbar = xs.reshape(B, S, H, P) * dts[..., None]
+    dA = (dts * A).reshape(B, nc, Q, G, rep)
+    cum = jnp.cumsum(dA, axis=2)                                 # (B,nc,Q,G,r)
+
+    # chunk-major layouts for the scan
+    def cmajor(t, shape):
+        return jnp.moveaxis(t.reshape(shape), 1, 0)
+    Bc = cmajor(Bm, (B, nc, Q, G, N))        # (nc,B,Q,G,N)
+    Cc = cmajor(Cm, (B, nc, Q, G, N))
+    Xc = cmajor(xbar, (B, nc, Q, G, rep, P))  # (nc,B,Q,G,r,P)
+    Lc = jnp.moveaxis(cum, 1, 0)              # (nc,B,Q,G,r)
+
+    ii = jnp.arange(Q)
+    tri = (ii[:, None] >= ii[None, :])
+
+    def step(state, inp):
+        bc, cc, xb, lc = inp              # per-chunk tensors
+        # intra-chunk: per-group scores, per-head decay gates
+        sg = pdot("bign,bjgn->bgij", cc, bc, pol)            # (B,G,Q,Q)
+        dgate = lc.transpose(0, 2, 3, 1)                     # (B,G,r,Q)
+        decay = jnp.exp(jnp.clip(dgate[..., :, None] - dgate[..., None, :],
+                                 -60.0, 0.0))
+        gate = jnp.where(tri, decay, 0.0)                    # (B,G,r,Q,Q)
+        y_intra = pdot("bgrij,bjgrp->bigrp", sg[:, :, None] * gate, xb, pol)
+        # inter-chunk: contribution of the carried state
+        hdecay = jnp.exp(lc)                                 # (B,Q,G,r)
+        y_inter = pdot("bqgn,bgrnp->bqgrp", cc, state, pol) \
+            * hdecay[..., None]
+        # new state: decayed old + sum_j B_j (x) (xbar_j * tail_j)
+        tail = jnp.exp(lc[:, -1:, :, :] - lc)                # (B,Q,G,r)
+        cstate = pdot("bqgn,bqgrp->bgrnp", bc, xb * tail[..., None], pol)
+        tot = jnp.exp(lc[:, -1])                             # (B,G,r)
+        new_state = state * tot[..., None, None] + cstate
+        return new_state, y_intra + y_inter
+
+    init = jnp.zeros((B, G, rep, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, init, (Bc, Cc, Xc, Lc))        # (nc,B,Q,G,r,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + xs.reshape(B, S, H, P) * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return pdot("bse,ed->bsd", y, p["w_out"], cfg.policy)
+
+
+def ssd_init_cache(cfg, batch: int):
+    d_inner, H = ssd_dims(cfg)
+    G, N, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    K = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, K, d_inner), jnp.float32),
+        "conv_b": jnp.zeros((batch, K, G * N), jnp.float32),
+        "conv_c": jnp.zeros((batch, K, G * N), jnp.float32),
+        "state": jnp.zeros((batch, G, H // G, N, P), jnp.float32),
+    }
+
+
+def _conv_step(cache, xt, w, b):
+    """One causal-conv step against a rolling window cache. xt: (B, 1, C)."""
+    window = jnp.concatenate([cache, xt], axis=1)            # (B, K, C)
+    out = (window * w[None]).sum(axis=1) + b
+    return jax.nn.silu(out)[:, None, :], window[:, 1:]
+
+
+def ssd_decode(p, x, cfg, cache):
+    """Single-token recurrent step. x: (B, 1, D)."""
+    B = x.shape[0]
+    d_inner, H = ssd_dims(cfg)
+    G, N, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    rep = H // G
+
+    z, xs, Bm, Cm, dt = _project(p, x, cfg)
+    xs, ncx = _conv_step(cache["conv_x"], xs, p["conv_x"], p["conv_bias_x"])
+    Bm, ncb = _conv_step(cache["conv_b"], Bm, p["conv_b"], p["conv_bias_b"])
+    Cm, ncc = _conv_step(cache["conv_c"], Cm, p["conv_c"], p["conv_bias_c"])
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    dA = jnp.exp(dts * A).reshape(B, G, rep)
+    xh = (xs[:, 0].reshape(B, G, rep, P)
+          * dts.reshape(B, G, rep)[..., None])                   # xbar
+    Bh = Bm[:, 0].reshape(B, G, N)
+    Ch = Cm[:, 0].reshape(B, G, N)
+    state = cache["state"] * dA[..., None, None] + \
+        Bh[:, :, None, :, None] * xh[:, :, :, None, :]
+    y = jnp.einsum("bgn,bgrnp->bgrp", Ch, state)
+    y = y + xs[:, 0].reshape(B, G, rep, P) \
+        * p["D_skip"].reshape(G, rep)[None, :, :, None]
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = pdot("bse,ed->bsd", y, p["w_out"], cfg.policy)
+    new_cache = {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc, "state": state}
+    return out, new_cache
+
+
+def ssd_reference(p, x, cfg):
+    """Naive sequential recurrence — oracle for the chunked path."""
+    B, S, D = x.shape
+    cache = ssd_init_cache(cfg, B)
+    outs = []
+    for t in range(S):
+        o, cache = ssd_decode(p, x[:, t:t + 1], cfg, cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

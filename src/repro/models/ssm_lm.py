@@ -1,0 +1,74 @@
+"""Mamba-2 language model (SSD backbone, attention-free)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssd
+from .lm import cross_entropy, embed, unembed_logits
+from .modules import dense_init, embed_init, split_keys, stack_init, zeros
+
+
+def _layer_init(key, cfg):
+    return {"ln": zeros((cfg.d_model,)), "ssd": ssd.ssd_init(key, cfg)}
+
+
+def init(cfg, key):
+    ks = split_keys(key, 3)
+    params = {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+        "blocks": stack_init(lambda k: _layer_init(k, cfg), ks[1],
+                             cfg.n_layers),
+        "ln_f": zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[2], (cfg.d_model, cfg.padded_vocab),
+                                       fan_in=cfg.d_model)
+    return params
+
+
+def backbone(params, tokens, cfg):
+    x = embed(params, tokens, cfg)
+
+    def body(carry, lp):
+        h = L.rmsnorm(lp["ln"], carry, cfg.norm_eps)
+        return carry + ssd.ssd_layer(lp["ssd"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg):
+    x = backbone(params, batch["tokens"], cfg)
+    logits = unembed_logits(params, x, cfg)
+    loss, denom = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss, "lm_loss": loss, "tokens": denom}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    one = ssd.ssd_init_cache(cfg, batch)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def decode_step(params, cfg, cache, tokens, cache_index):
+    x = embed(params, tokens[:, None], cfg)
+
+    def body(carry, xs):
+        lp, c = xs
+        h = L.rmsnorm(lp["ln"], carry, cfg.norm_eps)
+        o, nc = ssd.ssd_decode(lp["ssd"], h, cfg, c)
+        return carry + o, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed_logits(params, x, cfg)
+    return logits[:, 0], new_cache
+
+
+def forward_logits(params, batch, cfg):
+    """Prefill entry: logits only (serving-side forward)."""
+    return unembed_logits(params, backbone(params, batch["tokens"], cfg), cfg)

@@ -1,0 +1,60 @@
+"""InternVL2-style VLM. The vision tower is a STUB per the assignment:
+``batch["patches"]`` carries precomputed patch embeddings (InternViT
+features); the MLP projector and the InternLM2-style language backbone are
+real, and the LM loss is masked to text positions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pdot
+from . import layers as L
+from .lm import (cross_entropy, embed, init as lm_init, layer_windows,
+                 stack_apply, unembed_logits, init_cache as lm_init_cache,
+                 decode_step as lm_decode_step)
+from .modules import dense_init, split_keys
+
+
+def init(cfg, key):
+    params = lm_init(cfg, jax.random.fold_in(key, 0))
+    ks = split_keys(jax.random.fold_in(key, 1), 2)
+    params["projector"] = {
+        "w1": dense_init(ks[0], (cfg.frontend_dim, cfg.d_model),
+                         fan_in=cfg.frontend_dim),
+        "w2": dense_init(ks[1], (cfg.d_model, cfg.d_model),
+                         fan_in=cfg.d_model),
+    }
+    return params
+
+
+def project_patches(params, patches, cfg):
+    h = pdot("bpf,fd->bpd", patches.astype(jnp.float32),
+             params["projector"]["w1"], cfg.policy)
+    h = jax.nn.gelu(h)
+    return pdot("bpd,de->bpe", h, params["projector"]["w2"], cfg.policy)
+
+
+def forward_logits(params, batch, cfg):
+    """batch: patches (B, P, frontend_dim), tokens (B, S_text)."""
+    vis = project_patches(params, batch["patches"], cfg)
+    txt = embed(params, batch["tokens"], cfg)
+    x = jnp.concatenate([vis, txt], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = layer_windows(cfg, cfg.n_layers)
+    x, _ = stack_apply(params["dense_blocks"], x, cfg, positions, windows,
+                       moe=False)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return unembed_logits(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg):
+    """labels: (B, P + S_text) with -1 on patch positions."""
+    logits = forward_logits(params, batch, cfg)
+    loss, denom = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss, "lm_loss": loss, "tokens": denom}
+
+
+# decode is standard LM decode over the combined sequence (image prefilled)
+init_cache = lm_init_cache
+decode_step = lm_decode_step

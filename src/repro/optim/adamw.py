@@ -1,0 +1,105 @@
+"""Hand-written AdamW with global-norm clipping, warmup-cosine schedule,
+configurable moment dtypes, and an optional factored second moment
+(Adafactor-style row/col factoring) for 100B+ models where full f32/bf16
+Adam state does not fit the per-chip HBM budget (see DESIGN.md §6)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"     # bf16 halves optimizer HBM
+    factored_v: bool = False          # Adafactor-style v for >=2D params
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.clip(t, 0.0, 1.0)))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, 0.1 + 0.9 * cos)
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def init_state(params, cfg: OptConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def mk_m(p):
+        return jnp.zeros(p.shape, mdt)
+
+    def mk_v(p):
+        if cfg.factored_v and _factorable(p):
+            return {"row": jnp.zeros(p.shape[:-1], mdt),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], mdt)}
+        return jnp.zeros(p.shape, mdt)
+
+    return {
+        "m": jax.tree.map(mk_m, params),
+        "v": jax.tree.map(mk_v, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        if isinstance(v, dict):
+            g2 = jnp.square(g) + 1e-30
+            row = b2 * v["row"].astype(jnp.float32) + (1 - b2) * g2.mean(-1)
+            col = b2 * v["col"].astype(jnp.float32) + (1 - b2) * g2.mean(-2)
+            v32 = (row[..., None] * col[..., None, :]
+                   / jnp.maximum(row.mean(-1)[..., None, None], 1e-30))
+            new_v = {"row": row.astype(mdt), "col": col.astype(mdt)}
+        else:
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            new_v = v32.astype(mdt)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * p)
+        return new_p.astype(p.dtype), m32.astype(mdt), new_v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                 "v": tdef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

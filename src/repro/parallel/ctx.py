@@ -1,0 +1,61 @@
+"""Trace-time mesh context: lets model code insert sharding constraints
+(GSPMD hints) without threading the mesh through every call signature.
+``lower_cell`` installs the mesh before tracing; tests/examples that trace
+without a mesh get no-op constraints."""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT: list = []   # (mesh, batch_axes)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, batch_axes: tuple | None = None):
+    if batch_axes is None:
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _CURRENT.append((mesh, batch_axes))
+    try:
+        yield mesh
+    finally:
+        _CURRENT.pop()
+
+
+def current_mesh() -> Mesh | None:
+    return _CURRENT[-1][0] if _CURRENT else None
+
+
+def dp_axes():
+    return _CURRENT[-1][1] if _CURRENT else ()
+
+
+def constrain(x, *spec_dims):
+    """with_sharding_constraint if a mesh is installed; else identity.
+    Dims longer than x.ndim are trimmed from the left (so callers can pass
+    (dp, None, 'model') for both (B,S,V) and (B,V) logits)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    dims = list(spec_dims)[-x.ndim:] if len(spec_dims) > x.ndim \
+        else list(spec_dims) + [None] * (x.ndim - len(spec_dims))
+    # drop axis names absent from this mesh or already used by an earlier
+    # dim (dp_over_model puts "model" into the batch axes); check
+    # divisibility
+    clean = []
+    used: set = set()
+    for d, size in zip(dims, x.shape):
+        names = d if isinstance(d, tuple) else ((d,) if d else ())
+        names = tuple(n for n in names
+                      if n in mesh.axis_names and n not in used)
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        if names and size % total == 0:
+            clean.append(names if len(names) > 1 else names[0])
+            used.update(names)
+        else:
+            clean.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean)))

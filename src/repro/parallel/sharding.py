@@ -1,0 +1,212 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs per family.
+
+Logical layout on the production mesh (pod, data, model):
+  * batch          -> (pod, data)        [DP across pods + within pod]
+  * attention heads / mlp hidden / vocab / experts -> model   [TP / EP]
+  * fsdp_tp mode   -> large params additionally sharded on data [ZeRO-3]
+  * KV caches      -> batch on (pod,data) when divisible; head_dim (always a
+    multiple of 16 in the zoo) on model, so decode works for kv_heads < 16.
+
+Rules are path-regex -> per-dim templates, matched against the flattened
+parameter path (MaxText-style logical rules, but on paths). If no "M" dim
+of a matched template divides the model-axis size, the "model" axis falls
+back to the last divisible dim (e.g. GQA wk with 8 kv heads on a 16-way
+axis shards head_dim instead; non-256-multiple vocabs are padded upstream).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def data_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+# path-regex -> spec template ("M" = want model axis here; None = replicated).
+# Templates are right-padded with None; first match wins.
+_RULES: list[tuple[str, tuple | None]] = [
+    (r"embed$", ("M", None)),
+    (r"unembed$", (None, "M")),
+    # attention ------------------------------------------------------------
+    (r"(attn|xattn)/wq$", (None, "M", None)),
+    (r"(attn|xattn)/w[kv]$", (None, "M", None)),
+    (r"(attn|xattn)/wo$", ("M", None, None)),
+    (r"(attn|xattn)/b[qkv]$", None),
+    (r"(attn|xattn)/(q_norm|k_norm)$", None),
+    # MLA -------------------------------------------------------------------
+    (r"attn/w_dq$", None),
+    (r"attn/w_uq$", (None, "M", None)),
+    (r"attn/w_dkv$", None),
+    (r"attn/w_u[kv]$", (None, "M", None)),
+    (r"attn/w_kr$", None),
+    # dense MLP ---------------------------------------------------------------
+    (r"(mlp|shared)/w_gate$", (None, "M")),
+    (r"(mlp|shared)/w_up$", (None, "M")),
+    (r"(mlp|shared)/w_down$", ("M", None)),
+    # MoE experts (EP on model) ---------------------------------------------
+    (r"moe/router$", None),
+    (r"moe/w_(gate|up|down)$", ("M", None, None)),
+    # SSD ----------------------------------------------------------------------
+    (r"ssd/w[zx]$", (None, "M")),
+    (r"ssd/w(b|c|dt)$", None),
+    (r"ssd/conv_x$", (None, "M")),
+    (r"ssd/conv_bias_x$", ("M",)),
+    (r"ssd/(conv_b|conv_c|conv_bias_[bc])$", None),
+    (r"ssd/(A_log|D_skip|dt_bias)$", None),
+    (r"ssd/norm$", ("M",)),
+    (r"ssd/w_out$", ("M", None)),
+    # hybrid / misc projections ------------------------------------------------
+    (r"(mtp_proj|w_cat)$", ("M", None)),
+    (r"shared/w_out$", ("M", None)),
+    (r"frontend_proj$", ("M", None)),
+    (r"projector/w1$", (None, "M")),
+    (r"projector/w2$", ("M", None)),
+    (r".*", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape, mesh: Mesh, cfg, stacked: bool):
+    msize = model_size(mesh)
+    off = 1 if stacked else 0
+    body = shape[off:]
+    for pat, tpl in _RULES:
+        if not re.search(pat, path):
+            continue
+        dims: list = [None] * len(body)
+        if tpl is not None:
+            tplp = tuple(tpl) + (None,) * (len(body) - len(tpl))
+            placed = False
+            for d, t in enumerate(tplp[:len(body)]):
+                if t == "M" and body[d] % msize == 0 and not placed:
+                    dims[d] = "model"
+                    placed = True
+            if not placed and any(t == "M" for t in tplp):
+                # fallback: last divisible dim gets the model axis
+                for d in range(len(body) - 1, -1, -1):
+                    if body[d] % msize == 0:
+                        dims[d] = "model"
+                        break
+        dims = _apply_fsdp(path, body, dims, mesh, cfg)
+        if stacked:
+            dims = [None] + dims
+        return P(*dims)
+    return P()
+
+
+_FSDP_MIN_SIZE = 1 << 22  # 4M elements
+
+
+def _apply_fsdp(path, body, dims, mesh, cfg):
+    """fsdp_tp: shard the largest still-replicated dim of big params over
+    the data axes (ZeRO-3; across pods too when the pod axis exists)."""
+    if getattr(cfg, "shard_mode", "tp") != "fsdp_tp":
+        return dims
+    if int(np.prod(body)) < _FSDP_MIN_SIZE:
+        return dims
+    for axes in (dp_axes(mesh), ("data",)):
+        fsdp_size = int(np.prod([mesh.shape[a] for a in axes]))
+        cand = [(body[i], i) for i in range(len(body))
+                if dims[i] is None and body[i] % fsdp_size == 0]
+        if cand:
+            _, idx = max(cand)
+            dims = list(dims)
+            dims[idx] = tuple(axes) if len(axes) > 1 else axes[0]
+            return dims
+    return dims
+
+
+def param_specs(param_shapes, mesh: Mesh, cfg):
+    """PartitionSpec tree for a parameter pytree (ShapeDtypeStructs or
+    arrays). Layer-stacked leaves (under *blocks*) get their leading stack
+    dim replicated."""
+    msize = model_size(mesh)
+    dsize = mesh.shape.get("data", 1)
+
+    def fn(path, leaf):
+        ps = _path_str(path)
+        if getattr(cfg, "dp_over_model", False):
+            return P()        # small model: replicate, model axis = extra DP
+        stacked = "blocks" in ps
+        if getattr(cfg, "ep_mode", "1d") == "2d" and \
+                re.search(r"moe/w_(gate|up|down)$", ps):
+            off = 1 if stacked else 0
+            E = leaf.shape[off]
+            if E % (msize * dsize) == 0:
+                dims = [None] * len(leaf.shape)
+                dims[off] = ("model", "data")   # 1 expert per chip: no
+                return P(*dims)                  # FSDP weight gathers
+        return _spec_for(ps, leaf.shape, mesh, cfg, stacked)
+    return jax.tree_util.tree_map_with_path(fn, param_shapes)
+
+
+def batch_axes(cfg, mesh: Mesh):
+    axes = dp_axes(mesh)
+    if getattr(cfg, "dp_over_model", False):
+        axes = axes + ("model",)
+    return axes
+
+
+def batch_specs(cfg, mesh: Mesh, batch_shapes):
+    """Batch inputs: shard the leading (global-batch) dim on (pod, data)
+    — plus model when the config runs DP-over-model."""
+    dp = batch_axes(cfg, mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def fn(leaf):
+        if leaf.shape and leaf.shape[0] % dsize == 0:
+            return P(dp)
+        return P()
+    return jax.tree.map(fn, batch_shapes)
+
+
+def cache_specs(cfg, mesh: Mesh, cache_shapes, batch: int, max_len: int):
+    """KV/SSM cache specs (see module docstring)."""
+    dp = dp_axes(mesh)
+    dsize = data_size(mesh)
+    msize = model_size(mesh)
+
+    def fn(leaf):
+        dims = [None] * len(leaf.shape)
+        for i in range(1, len(leaf.shape)):
+            if leaf.shape[i] == batch and batch % dsize == 0:
+                dims[i] = dp
+                break
+        for i in range(len(leaf.shape) - 1, 0, -1):
+            # never the already-assigned batch dim, never the max_len dim
+            # (dynamic_update_slice target) — sizes may coincide, so the
+            # check is positional via dims[i], not by size == batch
+            if dims[i] is None and leaf.shape[i] != max_len \
+                    and leaf.shape[i] % msize == 0:
+                dims[i] = "model"
+                break
+        return P(*dims)
+    return jax.tree.map(fn, cache_shapes)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,162 @@
+"""Fault-tolerance tests: checkpoint atomicity/integrity/retention, resume,
+deterministic data replay, straggler watchdog, and optimizer behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, host_batch
+from repro.optim import adamw
+from repro.train.loop import StragglerEvent, TrainLoopConfig, train
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    for s in (10, 20, 30, 40):
+        ckpt.save(d, s, t)
+    assert ckpt.latest_step(d) == 40
+    ckpt.retain(d, keep=2)
+    assert sorted(int(x.split("_")[1]) for x in os.listdir(d)) == [30, 40]
+    like = jax.eval_shape(lambda: _tree())
+    restored = ckpt.restore(d, 40, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    path = ckpt.save(d, 5, t)
+    victim = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(path, victim))
+    arr = np.asarray(arr).copy()
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[0] ^= 0xFF
+    np.save(os.path.join(path, victim), arr)
+    like = jax.eval_shape(lambda: _tree())
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore(d, 5, like)
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    # a stale .tmp dir (simulated crash) must be ignored by latest_step
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_data_pipeline_deterministic_and_sharded():
+    cfg = get_smoke_config("qwen3-0.6b")
+    dc = DataConfig(seed=3, global_batch=8, seq_len=16)
+    a = host_batch(cfg, dc, step=5)
+    b = host_batch(cfg, dc, step=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = host_batch(cfg, dc, step=6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host sharding partitions the global batch
+    h0 = host_batch(cfg, dc, step=5, host_index=0, num_hosts=2)
+    assert h0["tokens"].shape[0] == 4
+
+
+def test_train_loop_runs_resumes_and_replays(tmp_path):
+    cfg = get_smoke_config("qwen3-0.6b")
+    opt = adamw.OptConfig(lr=1e-3, warmup_steps=2, total_steps=12)
+    data = DataConfig(seed=0, global_batch=4, seq_len=16)
+    d = str(tmp_path)
+
+    loop1 = TrainLoopConfig(total_steps=6, ckpt_every=3,
+                            straggler_factor=1e9)
+    state1, hist1 = train(cfg, opt, data, loop1, d, log=lambda *_: None)
+    assert ckpt.latest_step(d) == 6
+    losses1 = [h["loss"] for h in hist1]
+    assert all(np.isfinite(losses1))
+    assert losses1[-1] < losses1[0]          # it learns
+
+    # run to 12 in one go vs resume-from-6: identical final params
+    loop2 = TrainLoopConfig(total_steps=12, ckpt_every=6,
+                            straggler_factor=1e9)
+    state_resumed, _ = train(cfg, opt, data, loop2, d, log=lambda *_: None)
+    d2 = str(tmp_path / "fresh")
+    state_fresh, _ = train(cfg, opt, data, loop2, d2, log=lambda *_: None)
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state_resumed["params"], state_fresh["params"])))
+    assert diff < 1e-5, diff                  # bit-replayable restart
+
+
+def test_straggler_watchdog_emergency_checkpoint(tmp_path):
+    import time as _time
+
+    import jax as _jax
+    from repro.launch.step import make_train_step
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    opt = adamw.OptConfig(lr=1e-3)
+    data = DataConfig(seed=0, global_batch=4, seq_len=16)
+    d = str(tmp_path)
+
+    real_step = _jax.jit(make_train_step(cfg, opt))
+    calls = {"n": 0}
+
+    def wrapped(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 30:      # simulated straggler: one 1s stall
+            _time.sleep(1.0)
+        return real_step(state, batch)
+
+    with pytest.raises(StragglerEvent):
+        train(cfg, opt, data,
+              TrainLoopConfig(total_steps=40, ckpt_every=100,
+                              straggler_factor=3.0),
+              d, train_step=wrapped, log=lambda *_: None)
+    assert ckpt.latest_step(d) is not None    # emergency save happened
+
+
+def test_adamw_factored_v_close_to_full():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.standard_normal((256, 256)) * 0.01,
+                          jnp.float32)}
+    full = adamw.OptConfig(lr=1e-2, factored_v=False)
+    fact = adamw.OptConfig(lr=1e-2, factored_v=True)
+    sf = adamw.init_state(p, full)
+    sv = adamw.init_state(p, fact)
+    pf, sf, _ = adamw.apply_updates(p, g, sf, full)
+    pv, sv, _ = adamw.apply_updates(p, g, sv, fact)
+    # factored v approximates full v: update directions must agree closely
+    uf = np.asarray(pf["w"] - p["w"]).ravel()
+    uv = np.asarray(pv["w"] - p["w"]).ravel()
+    cos = float(uf @ uv / (np.linalg.norm(uf) * np.linalg.norm(uv)))
+    # rank-1 v is a coarse approximation on white-noise gradients; 0.8
+    # cosine matches Adafactor's own behaviour on this input
+    assert cos > 0.7, cos
+    assert np.all(np.isfinite(uv))
+    assert isinstance(sv["v"]["w"], dict)     # actually factored
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """A checkpoint written unsharded restores onto a 1-device 'mesh' with
+    explicit shardings (the elastic-restart path at CPU scale)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d = str(tmp_path)
+    t = {"w": jnp.arange(64.0).reshape(8, 8)}
+    ckpt.save(d, 1, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    like = jax.eval_shape(lambda: t)
+    r = ckpt.restore(d, 1, like, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["w"].sharding == sh["w"]

@@ -1,0 +1,219 @@
+"""Distribution-layer tests: sharding rules, multi-device lowering on a
+small mesh (subprocess with forced device count), gradient-compression
+numerics, and DP-vs-single-device equivalence."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.launch import specs as S
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in for spec computation (no devices)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_specs_attention_tp():
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = S.abstract_params(cfg)
+    spec = shd.param_specs(params, MESH, cfg)
+    blk = spec["dense_blocks"]
+    # stacked leading dim replicated; q heads too small in smoke cfg, but
+    # full cfg must shard heads on model
+    full = get_smoke_config("qwen2.5-14b").replace(
+        n_layers=2, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+        d_ff=13824)
+    pf = S.abstract_params(full)
+    sf = shd.param_specs(pf, MESH, full)
+    # qwen2.5: 40 q-heads and 8 kv-heads are both indivisible by the
+    # 16-way model axis -> the rule engine falls back to head_dim (128)
+    assert sf["dense_blocks"]["attn"]["wq"] == P(None, None, None, "model")
+    assert sf["dense_blocks"]["attn"]["wk"] == P(None, None, None, "model")
+    assert sf["dense_blocks"]["mlp"]["w_gate"] == P(None, None, "model")
+    assert sf["dense_blocks"]["mlp"]["w_down"] == P(None, "model", None)
+    assert sf["embed"][0] is None or sf["embed"] is not None  # exists
+
+
+def test_param_specs_moe_ep():
+    cfg = get_smoke_config("deepseek-v3-671b").replace(
+        n_experts=256, moe_d_ff=2048, d_model=7168)
+    params = S.abstract_params(cfg)
+    spec = shd.param_specs(params, MESH, cfg)
+    assert spec["moe_blocks"]["moe"]["w_gate"][1] == "model"  # experts on EP
+
+
+def test_fsdp_mode_adds_data_axis():
+    full = get_smoke_config("deepseek-v3-671b").replace(
+        n_layers=2, d_model=7168, n_experts=32, moe_d_ff=2048,
+        kv_lora_rank=512, q_lora_rank=1536, shard_mode="fsdp_tp")
+    pf = S.abstract_params(full)
+    sf = shd.param_specs(pf, MESH_MP, full)
+    wg = sf["moe_blocks"]["moe"]["w_gate"]  # (L, E, D, F) big
+    flat = [a for d in wg if d for a in (d if isinstance(d, tuple) else (d,))]
+    assert "data" in flat, wg
+
+
+def test_cache_specs_shard_batch_and_headdim():
+    cfg = get_smoke_config("qwen2.5-14b").replace(head_dim=128)
+    model_cache = jax.eval_shape(
+        lambda: __import__("repro.models.lm", fromlist=["x"]).init_cache(
+            cfg, 128, 32768))
+    spec = shd.cache_specs(cfg, MESH, model_cache, 128, 32768)
+    k = spec["dense_blocks"]["k"]
+    assert k[1] in ("data", ("data",))   # batch on the data axis
+    assert k[4] == "model"            # head_dim (kv heads not divisible)
+    assert k[2] is None               # never shard the max_len dim
+
+
+def test_batch_specs():
+    cfg = get_smoke_config("qwen3-0.6b")
+    batch = S.input_specs(cfg, "train_4k")
+    spec = shd.batch_specs(cfg, MESH_MP, batch)
+    assert spec["tokens"] == P(("pod", "data"))
+
+
+def test_compressed_psum_error_feedback():
+    """bf16 all-reduce with error feedback: telescoping residuals keep the
+    long-run mean unbiased (vs plain bf16 rounding which drifts)."""
+    from repro.parallel.collectives import compressed_psum, zeros_like_residual
+    mesh = jax.make_mesh((1,), ("d",))
+    g = {"w": jnp.full((256,), 1.0 + 2.0**-12)}  # not bf16-representable
+
+    def run_steps(n):
+        res = zeros_like_residual(g)
+        total = jnp.zeros_like(g["w"])
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+
+        @partial(shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
+        def one(gw, rw):
+            red, nr = compressed_psum({"w": gw}, {"w": rw}, "d")
+            return red["w"], nr["w"]
+
+        for _ in range(n):
+            red, res_w = one(g["w"], res["w"])
+            res = {"w": res_w}
+            total = total + red
+        return total / n
+
+    avg = run_steps(64)   # residual cycle is 2^(8-12+1)=32 steps at RN-even
+    err_fb = float(jnp.max(jnp.abs(avg - g["w"])))
+    plain = g["w"].astype(jnp.bfloat16).astype(jnp.float32)
+    err_plain = float(jnp.max(jnp.abs(plain - g["w"])))
+    # the RN-even residual cycle gives mean error <= err_plain/4 (it hits
+    # the bound exactly when steps is a multiple of the 16-step cycle)
+    assert err_fb <= err_plain / 4 + 1e-12
+
+
+SUBPROC_DP = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.optim import adamw
+    from repro.launch.step import make_train_step
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    opt = adamw.OptConfig(lr=1e-3)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw.init_state(params, opt)}
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+    }
+    step = make_train_step(cfg, opt)
+    # single device
+    s1, m1 = jax.jit(step)(state, batch)
+    # 8-way DP
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    bs = {k: NamedSharding(mesh, P("data")) for k in batch}
+    batch_sharded = {k: jax.device_put(v, bs[k]) for k, v in batch.items()}
+    s8, m8 = jax.jit(step)(state, batch_sharded)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     s1["params"], s8["params"])
+    worst = max(jax.tree.leaves(d))
+    print("WORST", worst)
+    assert worst < 5e-5, worst
+    print("OK")
+""")
+
+
+def test_dp_matches_single_device_subprocess():
+    r = subprocess.run([sys.executable, "-c", SUBPROC_DP],
+                       capture_output=True, text=True, cwd="/root/repo",
+                       timeout=600)
+    assert "OK" in r.stdout, (r.stdout[-2000:], r.stderr[-2000:])
+
+
+def test_hlo_analyzer_trip_counts():
+    from repro.launch.hlo_cost import analyze_hlo
+
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    w = jnp.zeros((8, 64, 64))
+    x = jnp.zeros((16, 64))
+    txt = jax.jit(lambda x, w: jax.lax.scan(body, x, w)[0]) \
+        .lower(x, w).compile().as_text()
+    res = analyze_hlo(txt)
+    assert res["dot_flops"] == 2 * 16 * 64 * 64 * 8
+    assert res["unknown_trip_counts"] == 0
+
+
+def test_dp_over_model_specs_replicate_params():
+    cfg = get_smoke_config("mamba2-130m").replace(dp_over_model=True)
+    params = S.abstract_params(cfg)
+    spec = shd.param_specs(params, MESH, cfg)
+    assert all(s == P() for s in jax.tree.leaves(
+        spec, is_leaf=lambda x: isinstance(x, P)))
+    batch = S.input_specs(cfg, "train_4k")
+    bspec = shd.batch_specs(cfg, MESH, batch)
+    assert bspec["tokens"] == P(("data", "model"))
+
+
+def test_mixed_policy_knob_is_numerically_sane():
+    """attn_policy=bf16 must stay close to the paper-faithful forward."""
+    import numpy as np
+    from repro.models import get_model
+    cfg6 = get_smoke_config("qwen3-0.6b")
+    cfgm = cfg6.replace(attn_policy="bf16")
+    m6, mm = get_model(cfg6), get_model(cfgm)
+    params = m6.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg6.vocab_size, (2, 32))),
+        "labels": jnp.asarray(rng.integers(0, cfg6.vocab_size, (2, 32))),
+    }
+    l6 = float(m6.loss_fn(params, batch)[0])
+    lm = float(mm.loss_fn(params, batch)[0])
+    assert abs(l6 - lm) < 0.02, (l6, lm)
+
+
+def test_ep2d_specs_when_divisible():
+    cfg = get_smoke_config("deepseek-v3-671b").replace(
+        n_experts=256, ep_mode="2d")
+    params = S.abstract_params(cfg)
+    spec = shd.param_specs(params, MESH, cfg)
+    wg = spec["moe_blocks"]["moe"]["w_gate"]
+    assert wg[1] == ("model", "data"), wg
