@@ -32,9 +32,11 @@ def run():
     n = 128
     rows = []
     res = {}
-    for tname, (ka, kb) in TYPES.items():
-        a = _mats(n, ka, seed=hash(tname) % 1000)
-        b = _mats(n, kb, seed=hash(tname) % 1000 + 1)
+    for ti, (tname, (ka, kb)) in enumerate(TYPES.items()):
+        # NB not hash(tname): string hashes are salted per process
+        # (PYTHONHASHSEED), which made this benchmark's claim check flaky
+        a = _mats(n, ka, seed=2 * ti)
+        b = _mats(n, kb, seed=2 * ti + 1)
         cells = []
         for m in METHODS:
             c = policy_mm(jnp.asarray(a), jnp.asarray(b), m)

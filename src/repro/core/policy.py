@@ -53,6 +53,12 @@ class PrecisionPolicy:
     def passes(self) -> int:
         return max(1, len(self.keep))
 
+    @property
+    def groups(self) -> tuple[int, ...]:
+        """Scale groups of the kept products (ascending i+j) — one f32
+        accumulator each in both the kernel and the XLA expansion."""
+        return tuple(sorted({i + j for (i, j) in self.keep}))
+
     def is_plain(self) -> bool:
         return self.n_splits == 1
 
@@ -149,9 +155,21 @@ def _plain_dot(a, b, policy: PrecisionPolicy, dims):
                                precision=jax.lax.Precision.DEFAULT)
 
 
+def _maybe_pallas(a, b, policy: PrecisionPolicy, dims):
+    """Fused-kernel dispatch (kernels/dispatch.py), None -> XLA fallback.
+
+    Imported lazily: repro.kernels imports this module at load time, so the
+    dependency must point kernels -> core only at module scope."""
+    from repro.kernels import dispatch
+    return dispatch.maybe_dispatch(a, b, policy, dims)
+
+
 def _dot_impl(a, b, policy: PrecisionPolicy, dims):
     if policy.is_plain():
         return _plain_dot(a, b, policy, dims)
+    out = _maybe_pallas(a, b, policy, dims)
+    if out is not None:
+        return out
     return _tcec_dot(a, b, policy, dims)
 
 

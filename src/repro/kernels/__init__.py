@@ -1,9 +1,13 @@
 """TPU Pallas kernels for the paper's compute hot-spot: the error-corrected
 single-precision GEMM itself (the paper's CUTLASS kernel, re-derived for the
-bf16 MXU + VMEM memory hierarchy)."""
+bf16 MXU + VMEM memory hierarchy), plus the dispatch + autotuning subsystem
+that routes every eligible framework contraction through it."""
 from .ops import pick_block, tcec_matmul
-from .ref import matmul_f64, tcec_matmul_ref
-from .tcec_matmul import VMEM_BUDGET, tcec_matmul_pallas, vmem_bytes
+from .ref import matmul_f64, tcec_bmm_ref, tcec_matmul_ref
+from .tcec_matmul import (EPILOGUE_ACTIVATIONS, VMEM_BUDGET,
+                          tcec_matmul_pallas, vmem_bytes)
+from . import dispatch, tuning
 
-__all__ = ["tcec_matmul", "pick_block", "tcec_matmul_ref", "matmul_f64",
-           "tcec_matmul_pallas", "vmem_bytes", "VMEM_BUDGET"]
+__all__ = ["tcec_matmul", "pick_block", "tcec_matmul_ref", "tcec_bmm_ref",
+           "matmul_f64", "tcec_matmul_pallas", "vmem_bytes", "VMEM_BUDGET",
+           "EPILOGUE_ACTIVATIONS", "dispatch", "tuning"]

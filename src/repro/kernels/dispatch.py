@@ -1,0 +1,173 @@
+"""Unified kernel dispatch: routes framework contractions to the fused
+Pallas TCEC kernel.
+
+Every split-policy contraction in the framework funnels through
+``repro.core.policy._dot_impl`` (``pdot`` / ``policy_mm`` / ``policy_bmm``
+and their ``custom_vjp`` backward GEMMs).  This module decides, per call,
+whether that contraction lowers to the fused Pallas kernel
+(``kernels/tcec_matmul.py``) or stays on the documented XLA term-expansion
+fallback.  Both paths compute the identical corrected-GEMM math — the
+kernel just fuses it into one VMEM-tiled pass (the paper's CUTLASS
+integration), which is where the throughput headline comes from.
+
+Dispatch rules (see docs/kernels.md):
+
+  1. the policy is a bf16 split policy (``tcec_bf16x3`` / ``tcec_bf16x6``):
+     plain policies are a single XLA dot, and the fp16 reproduction
+     policies model CUDA Tensor Cores, which the bf16 MXU kernel cannot;
+  2. the contraction is 2-D or single-batch-dim 3-D with one m/n/k dim each
+     (after ``pdot``'s canonical transpose this covers every model-zoo
+     GEMM; multi-dim m/n einsums stay on XLA);
+  3. M, N, K all reach ``min_dim`` (tiny GEMMs lose more to 128-padding
+     than the fusion wins);
+  4. the backend is TPU — or ``force`` is set, which runs the kernel in
+     interpret mode (tests, CPU verification);
+  5. the escape hatch is off: ``REPRO_DISABLE_PALLAS=1`` (or
+     ``override(enabled=False)``) restores the XLA path wholesale.
+
+The decision runs at trace time on static shapes, so under ``jit`` it costs
+nothing at runtime.  NB: config changes do not retrigger tracing — toggle
+the escape hatch *before* the first traced call of a given shape, or clear
+jit caches.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from . import ops, tuning
+
+
+def env_flag(name: str) -> bool:
+    """Truthy env parse: '', '0', 'false', 'no' (any case) all mean off."""
+    return os.environ.get(name, "").strip().lower() not in (
+        "", "0", "false", "no", "off")
+
+
+@dataclass(frozen=True)
+class DispatchConfig:
+    enabled: bool = True          # escape hatch: REPRO_DISABLE_PALLAS unsets
+    force: bool = False           # dispatch even off-TPU (interpret mode)
+    min_dim: int = 128            # smallest M/N/K worth padding to the MXU
+    block: tuple[int, int, int] | None = None   # override the autotuner
+    interpret: bool | None = None               # None = auto (non-TPU)
+    fuse_epilogue: bool = False   # models.layers fused_linear hook
+
+    @staticmethod
+    def from_env() -> "DispatchConfig":
+        return DispatchConfig(
+            enabled=not env_flag("REPRO_DISABLE_PALLAS"),
+            force=env_flag("REPRO_FORCE_PALLAS"),
+            min_dim=int(os.environ.get("REPRO_PALLAS_MIN_DIM", "128")),
+            fuse_epilogue=env_flag("REPRO_FUSE_EPILOGUE"),
+        )
+
+
+_CONFIG = DispatchConfig.from_env()
+
+
+def config() -> DispatchConfig:
+    return _CONFIG
+
+
+def reload_config() -> DispatchConfig:
+    """Re-read the env knobs (tests; long-lived processes toggling hatches)."""
+    global _CONFIG
+    _CONFIG = DispatchConfig.from_env()
+    return _CONFIG
+
+
+@contextlib.contextmanager
+def override(**kw):
+    """Scoped config override: ``with dispatch.override(force=True): ...``"""
+    global _CONFIG
+    prev = _CONFIG
+    _CONFIG = replace(prev, **kw)
+    try:
+        yield _CONFIG
+    finally:
+        _CONFIG = prev
+
+
+# ----------------------------------------------------------- eligibility
+
+def eligible_policy(policy: PrecisionPolicy) -> bool:
+    """Rule 1: bf16 split policies only."""
+    return (not policy.is_plain()
+            and policy.jdtype == jnp.bfloat16
+            and not policy.upcast_products)
+
+
+def _canonicalize(a, b, dims):
+    """Map a ``dot_general`` spec onto the kernel's ``(B?, M, K) @ (B?, K, N)``
+    layout, or return None when the contraction doesn't fit (rule 2).
+
+    Handles the backward GEMMs too: ``custom_vjp`` calls ``_dot_impl`` with
+    the contraction on either operand side, so a transposed operand is
+    swapped into canonical order here (the kernel output order matches
+    ``dot_general``'s ``(batch, lhs-free, rhs-free)``).
+    """
+    (ca, cb), (ba, bb) = dims
+    if len(ca) != 1 or len(cb) != 1:
+        return None
+    nb = len(ba)
+    if nb > 1 or tuple(ba) != tuple(range(nb)) or tuple(bb) != tuple(range(nb)):
+        return None
+    if a.ndim != nb + 2 or b.ndim != nb + 2:
+        return None
+    if ca[0] == nb:            # contraction leads -> swap to (.., m, k)
+        a = jnp.swapaxes(a, nb, nb + 1)
+    elif ca[0] != nb + 1:
+        return None
+    if cb[0] == nb + 1:        # contraction trails -> swap to (.., k, n)
+        b = jnp.swapaxes(b, nb, nb + 1)
+    elif cb[0] != nb:
+        return None
+    return a, b
+
+
+def maybe_dispatch(a, b, policy: PrecisionPolicy, dims):
+    """Return the fused-kernel result, or None to fall back to XLA.
+
+    Called from ``repro.core.policy._dot_impl`` for every split-policy
+    contraction (forward and backward).
+    """
+    cfg = _CONFIG
+    if not cfg.enabled or not eligible_policy(policy):
+        return None
+    if not (cfg.force or jax.default_backend() == "tpu"):
+        return None
+    canon = _canonicalize(a, b, dims)
+    if canon is None:
+        return None
+    at, bt = canon
+    M, K = at.shape[-2], at.shape[-1]
+    N = bt.shape[-1]
+    if min(M, N, K) < cfg.min_dim:
+        return None
+    return ops.tcec_matmul(at, bt, policy=policy.name, block=cfg.block,
+                           interpret=cfg.interpret)
+
+
+# ------------------------------------------------- epilogue-fusion hook
+
+def epilogue_eligible(policy: PrecisionPolicy) -> bool:
+    """Whether ``models.layers.fused_linear`` may fold its bias/activation
+    into the kernel's scaled epilogue under the current config."""
+    cfg = _CONFIG
+    return (cfg.enabled and cfg.fuse_epilogue and eligible_policy(policy)
+            and (cfg.force or jax.default_backend() == "tpu"))
+
+
+def tuned_block(M: int, N: int, K: int, policy_name: str,
+                batch: int = 1) -> tuple[int, int, int]:
+    """Config override if set, else the autotuner (measured or heuristic)."""
+    cfg = _CONFIG
+    if cfg.block is not None:
+        return cfg.block
+    return tuning.get_block(M, N, K, policy_name, batch=batch)

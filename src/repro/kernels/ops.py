@@ -1,20 +1,20 @@
-"""Public jit'd entry point for the TCEC matmul kernel.
+"""Public entry point for the TCEC matmul kernel.
 
 Handles backend dispatch (compiled on TPU, ``interpret=True`` elsewhere),
-padding to MXU-aligned block multiples, and block-shape selection under the
-VMEM budget.  Callers that want the technique without caring about kernels
-should use :func:`repro.core.pdot`, which lowers to the same math at the XLA
-level; this wrapper is the explicit-kernel path benchmarked in §Perf.
+padding to MXU-aligned block multiples, batched operands, the fused
+bias/activation epilogue, and block-shape selection (measured autotuner in
+``tuning.py``, VMEM-filtered heuristic as fallback).  Callers that want the
+technique without caring about kernels should use :func:`repro.core.pdot`,
+which routes eligible contractions here automatically via
+``kernels/dispatch.py`` and falls back to the XLA term expansion elsewhere.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from .tcec_matmul import VMEM_BUDGET, tcec_matmul_pallas, vmem_bytes
-from repro.core.policy import get_policy
+from . import tuning
 
 
 def _on_tpu() -> bool:
@@ -22,43 +22,62 @@ def _on_tpu() -> bool:
 
 
 def pick_block(M: int, N: int, K: int, policy_name: str) -> tuple[int, int, int]:
-    """Largest MXU-aligned block that fits VMEM and divides the padded shape."""
-    policy = get_policy(policy_name)
-    best = (128, 128, 128)
-    for bm in (512, 256, 128):
-        for bn in (512, 256, 128):
-            for bk in (512, 256, 128):
-                if vmem_bytes((bm, bn, bk), policy) > VMEM_BUDGET:
-                    continue
-                # prefer blocks that don't overshoot the problem
-                if bm <= max(M, 128) and bn <= max(N, 128) and bk <= max(K, 128):
-                    cand = (bm, bn, bk)
-                    if cand > best:
-                        best = cand
-    return best
+    """Static heuristic block choice (back-compat shim over tuning.py)."""
+    return tuning.heuristic_block(M, N, K, policy_name)
 
 
-def _pad_to(x, m0, m1):
-    p0 = (-x.shape[0]) % m0
-    p1 = (-x.shape[1]) % m1
-    if p0 == 0 and p1 == 0:
-        return x
-    return jnp.pad(x, ((0, p0), (0, p1)))
+def _pad_dims(x, dims_to_mult: dict[int, int]):
+    pads = [(0, 0)] * x.ndim
+    any_pad = False
+    for axis, m in dims_to_mult.items():
+        p = (-x.shape[axis]) % m
+        pads[axis] = (0, p)
+        any_pad |= p > 0
+    return jnp.pad(x, pads) if any_pad else x
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
 def tcec_matmul(a: jax.Array, b: jax.Array, policy: str = "tcec_bf16x6",
                 block: tuple[int, int, int] | None = None,
-                interpret: bool | None = None) -> jax.Array:
-    """FP32-accurate (M,K)@(K,N) on the bf16 MXU via the fused TCEC kernel."""
-    M, K = a.shape
-    _, N = b.shape
+                interpret: bool | None = None, bias: jax.Array | None = None,
+                activation: str | None = None,
+                out_scale: float = 1.0) -> jax.Array:
+    """FP32-accurate GEMM on the bf16 MXU via the fused TCEC kernel.
+
+    ``(M, K) @ (K, N) -> (M, N)`` or batched ``(B, M, K) @ (B, K, N) ->
+    (B, M, N)``, any shapes (padded internally to block multiples).  The
+    optional fused epilogue computes ``act(out * out_scale + bias)`` inside
+    the kernel (``bias`` shaped ``(N,)`` or ``(1, N)``).
+
+    When ``block`` is None the autotuner picks it: a measured winner from
+    the on-disk cache when available, the VMEM-filtered heuristic otherwise
+    (see ``kernels/tuning.py``).
+    """
+    batched = a.ndim == 3
+    assert a.ndim == b.ndim, (a.shape, b.shape)
+    if batched:
+        B, M, K = a.shape
+        B2, K2, N = b.shape
+        assert B == B2, (a.shape, b.shape)
+    else:
+        B = 1
+        M, K = a.shape
+        K2, N = b.shape
+    # must reject BEFORE padding — zero-padding would silently "align"
+    # mismatched contraction dims into a wrong-but-finite result
+    assert K == K2, (a.shape, b.shape)
     if interpret is None:
         interpret = not _on_tpu()
     if block is None:
-        block = pick_block(M, N, K, policy)
-    ap = _pad_to(a.astype(jnp.float32), block[0], block[2])
-    bp = _pad_to(b.astype(jnp.float32), block[2], block[1])
-    out = tcec_matmul_pallas(ap, bp, policy_name=policy, block=block,
-                             interpret=interpret)
-    return out[:M, :N]
+        block = tuning.get_block(M, N, K, policy, batch=B)
+    bm, bn, bk = block
+    nd = a.ndim
+    ap = _pad_dims(a.astype(jnp.float32), {nd - 2: bm, nd - 1: bk})
+    bp = _pad_dims(b.astype(jnp.float32), {nd - 2: bk, nd - 1: bn})
+    bp2 = None
+    if bias is not None:
+        bias2 = jnp.asarray(bias, jnp.float32).reshape(1, N)
+        bp2 = _pad_dims(bias2, {1: bn})
+    out = tcec_matmul_pallas(ap, bp, bp2, policy_name=policy, block=block,
+                             interpret=interpret, activation=activation,
+                             out_scale=out_scale)
+    return out[..., :M, :N]

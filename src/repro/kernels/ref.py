@@ -44,6 +44,25 @@ def tcec_matmul_ref(a, b, policy_name: str):
     return out
 
 
+def tcec_bmm_ref(a, b, policy_name: str):
+    """Batched oracle: (B, M, K) @ (B, K, N) -> (B, M, N) f32."""
+    return jnp.stack([tcec_matmul_ref(a[i], b[i], policy_name)
+                      for i in range(a.shape[0])])
+
+
+def epilogue_ref(out, bias=None, activation: str | None = None,
+                 out_scale: float = 1.0):
+    """The fused kernel's scaled epilogue, restated with the same jnp ops
+    the unfused model path uses: ``act(out * out_scale + bias)``."""
+    from .tcec_matmul import EPILOGUE_ACTIVATIONS
+    out = jnp.asarray(out, jnp.float32)
+    if out_scale != 1.0:
+        out = out * jnp.float32(out_scale)
+    if bias is not None:
+        out = out + jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    return EPILOGUE_ACTIVATIONS[activation](out)
+
+
 def matmul_f64(a, b) -> np.ndarray:
     """Ground truth for Eq. (7) relative residuals."""
     return np.asarray(a, dtype=np.float64) @ np.asarray(b, dtype=np.float64)

@@ -1,0 +1,276 @@
+"""Measured block-shape autotuner for the TCEC kernel (paper §V discipline).
+
+The paper's headline throughput only materializes after sweeping kernel
+parameters under the shared-memory-capacity constraint (their Table 3 /
+CUTLASS parameter sweep).  This module is the TPU analogue:
+
+  * :func:`candidate_blocks` enumerates MXU-aligned ``(bm, bn, bk)`` triples
+    that survive the VMEM-capacity filter (``vmem_bytes <= VMEM_BUDGET``);
+  * :func:`autotune` times each surviving candidate on the real kernel
+    (compiled on TPU; injectable measure function elsewhere) and picks the
+    fastest;
+  * winners persist to an on-disk JSON cache keyed by
+    ``(backend, policy, shape-bucket)`` with an in-memory LRU in front, so
+    tuned choices are reused across calls *and across processes*.
+
+Cache format (see docs/kernels.md — "Autotuner cache"):
+
+    {"version": 1,
+     "entries": {"cpu/tcec_bf16x6/b1_m256_n256_k256":
+                   {"block": [128, 128, 256], "ms": 0.41,
+                    "source": "measured"}}}
+
+Invalidation: delete the file, point ``REPRO_TUNE_CACHE`` elsewhere, or bump
+``CACHE_VERSION`` (version-mismatched files are ignored wholesale).
+
+Environment knobs:
+
+  * ``REPRO_TUNE_CACHE``   — cache file path (default
+    ``~/.cache/repro/tcec_autotune.json``).
+  * ``REPRO_TUNE=1``       — force measurement even off-TPU (tests/bench).
+  * ``REPRO_TUNE_DISABLE=1`` — never measure; heuristic only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import get_policy
+from .tcec_matmul import VMEM_BUDGET, tcec_matmul_pallas, vmem_bytes
+
+CACHE_VERSION = 1
+CANDIDATE_TILES = (128, 256, 512)
+_DEFAULT_CACHE_PATH = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "tcec_autotune.json")
+
+
+def cache_path() -> str:
+    return os.environ.get("REPRO_TUNE_CACHE", _DEFAULT_CACHE_PATH)
+
+
+def _round_up(x: int, m: int) -> int:
+    return max(m, ((x + m - 1) // m) * m)
+
+
+def shape_bucket(B: int, M: int, N: int, K: int) -> tuple[int, int, int, int]:
+    """Shapes are bucketed to their 128-padded dims: the kernel pads anyway,
+    so two problems with the same padded shape share one tuned block."""
+    return (max(1, B), _round_up(M, 128), _round_up(N, 128), _round_up(K, 128))
+
+
+def heuristic_block(M: int, N: int, K: int,
+                    policy_name: str) -> tuple[int, int, int]:
+    """Largest MXU-aligned block that fits VMEM and divides the padded shape.
+
+    The static fallback used when no measurement is available (and the
+    baseline the benchmarks compare tuned choices against).
+    """
+    policy = get_policy(policy_name)
+    best = (128, 128, 128)
+    for bm in (512, 256, 128):
+        for bn in (512, 256, 128):
+            for bk in (512, 256, 128):
+                if vmem_bytes((bm, bn, bk), policy) > VMEM_BUDGET:
+                    continue
+                # prefer blocks that don't overshoot the problem
+                if bm <= max(M, 128) and bn <= max(N, 128) and bk <= max(K, 128):
+                    cand = (bm, bn, bk)
+                    if cand > best:
+                        best = cand
+    return best
+
+
+def candidate_blocks(M: int, N: int, K: int, policy_name: str,
+                     budget: int = VMEM_BUDGET) -> list[tuple[int, int, int]]:
+    """MXU-aligned candidates under the VMEM budget, largest-first.
+
+    Candidates overshooting the (128-padded) problem in any dim are dropped —
+    they only add padding FLOPs, never throughput.
+    """
+    policy = get_policy(policy_name)
+    _, pm, pn, pk = shape_bucket(1, M, N, K)
+    out = []
+    for bm in CANDIDATE_TILES:
+        if bm > pm:
+            continue
+        for bn in CANDIDATE_TILES:
+            if bn > pn:
+                continue
+            for bk in CANDIDATE_TILES:
+                if bk > pk:
+                    continue
+                if vmem_bytes((bm, bn, bk), policy, has_bias=True) <= budget:
+                    out.append((bm, bn, bk))
+    out.sort(key=lambda b: (-(b[0] * b[1] * b[2]), b))
+    return out or [(128, 128, 128)]
+
+
+class BlockCache:
+    """On-disk JSON cache of measured block choices + in-memory LRU front."""
+
+    def __init__(self, path: str | None = None, capacity: int = 256):
+        self.path = path or cache_path()
+        self.capacity = capacity
+        self._mem: OrderedDict[str, dict] = OrderedDict()
+        self._disk: dict[str, dict] | None = None   # loaded lazily
+        self._dirty: set[str] = set()               # keys THIS process wrote
+
+    # ------------------------------------------------------------- disk io
+
+    def _read_file(self) -> dict[str, dict]:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if data.get("version") == CACHE_VERSION:
+                return dict(data.get("entries", {}))
+        except (OSError, ValueError):
+            pass   # absent or corrupt file == empty cache
+        return {}
+
+    def _load_disk(self) -> dict[str, dict]:
+        if self._disk is None:
+            self._disk = self._read_file()
+        return self._disk
+
+    def _flush(self):
+        # merge-on-write: re-read the file and overlay only the keys this
+        # process measured, so concurrent tuners don't clobber each other's
+        # entries (last-writer-wins per KEY, not per file)
+        ours = self._load_disk()
+        fresh = self._read_file()
+        for key in self._dirty:
+            if key in ours:
+                fresh[key] = ours[key]
+        fresh.update({k: v for k, v in ours.items() if k not in fresh})
+        self._disk = fresh
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": fresh}, f, indent=1)
+        os.replace(tmp, self.path)   # atomic: concurrent readers see old/new
+
+    # ------------------------------------------------------------- lookups
+
+    def get(self, key: str) -> dict | None:
+        if key in self._mem:
+            self._mem.move_to_end(key)
+            return self._mem[key]
+        entry = self._load_disk().get(key)
+        if entry is not None:
+            self._put_mem(key, entry)
+        return entry
+
+    def _put_mem(self, key: str, entry: dict):
+        self._mem[key] = entry
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+
+    def put(self, key: str, entry: dict, persist: bool):
+        self._put_mem(key, entry)
+        if persist:
+            self._load_disk()[key] = entry
+            self._dirty.add(key)
+            self._flush()
+
+
+_default_cache: BlockCache | None = None
+
+
+def get_cache() -> BlockCache:
+    global _default_cache
+    if _default_cache is None or _default_cache.path != cache_path():
+        _default_cache = BlockCache()
+    return _default_cache
+
+
+def cache_key(B: int, M: int, N: int, K: int, policy_name: str,
+              backend: str) -> str:
+    b, m, n, k = shape_bucket(B, M, N, K)
+    return f"{backend}/{policy_name}/b{b}_m{m}_n{n}_k{k}"
+
+
+# ------------------------------------------------------------- measurement
+
+def _should_measure() -> bool:
+    from .dispatch import env_flag
+    if env_flag("REPRO_TUNE_DISABLE"):
+        return False
+    if env_flag("REPRO_TUNE"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _measure_block(B, M, N, K, policy_name, block, reps: int = 3,
+                   interpret: bool | None = None) -> float:
+    """Wall-clock one padded kernel call (ms, best of ``reps``)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bm, bn, bk = block
+    m, n, k = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
+    shape_a = (B, m, k) if B > 1 else (m, k)
+    shape_b = (B, k, n) if B > 1 else (k, n)
+    a = jnp.ones(shape_a, jnp.float32)
+    b = jnp.ones(shape_b, jnp.float32)
+    run = lambda: tcec_matmul_pallas(a, b, policy_name=policy_name,
+                                     block=block, interpret=interpret)
+    jax.block_until_ready(run())   # compile / warm up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
+             measure=None, cache: BlockCache | None = None, reps: int = 3,
+             max_candidates: int | None = None,
+             interpret: bool | None = None) -> tuple[tuple[int, int, int], dict]:
+    """Pick a block for ``(B, M, N, K)`` under ``policy_name``.
+
+    Returns ``(block, meta)`` where ``meta["source"]`` is one of
+    ``"cache"`` (hit, in-memory or disk), ``"measured"`` (fresh sweep,
+    persisted), or ``"heuristic"`` (no measurement available — not
+    persisted, so a later TPU process still gets to measure).
+
+    ``measure`` is injectable: a callable ``block -> milliseconds``.  When
+    ``None``, real wall-clock measurement runs iff on TPU or ``REPRO_TUNE=1``.
+    """
+    cache = cache or get_cache()
+    backend = jax.default_backend()
+    key = cache_key(B, M, N, K, policy_name, backend)
+    hit = cache.get(key)
+    if hit is not None:
+        return tuple(hit["block"]), {**hit, "source": "cache"}
+
+    do_measure = measure is not None or _should_measure()
+    if not do_measure:
+        block = heuristic_block(M, N, K, policy_name)
+        entry = {"block": list(block), "ms": None, "source": "heuristic"}
+        cache.put(key, entry, persist=False)
+        return block, entry
+
+    if measure is None:
+        measure = lambda blk: _measure_block(B, M, N, K, policy_name, blk,
+                                             reps=reps, interpret=interpret)
+    cands = candidate_blocks(M, N, K, policy_name)
+    if max_candidates:
+        cands = cands[:max_candidates]
+    timings = {blk: measure(blk) for blk in cands}
+    block = min(timings, key=timings.get)
+    entry = {"block": list(block), "ms": timings[block], "source": "measured"}
+    cache.put(key, entry, persist=True)
+    return block, {**entry, "timings": {str(k): v for k, v in timings.items()}}
+
+
+def get_block(M: int, N: int, K: int, policy_name: str,
+              batch: int = 1) -> tuple[int, int, int]:
+    """The dispatch-facing entry: tuned block if available, else heuristic."""
+    block, _ = autotune(batch, M, N, K, policy_name)
+    return block

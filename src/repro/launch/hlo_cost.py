@@ -184,8 +184,8 @@ class HloAnalyzer:
                 fl = self._dot_flops(res, rhs, raw_shapes)
                 total.flops += fl
                 total.bytes += shapes[name] + self._operand_bytes(rhs, shapes)
-                lhs_m = re.search(r"dot\(%?([\w.\-]+)", rhs)
-                lsh = raw_shapes.get(lhs_m.group(1), "?") if lhs_m else "?"
+                lhs = self._dot_lhs(rhs)
+                lsh = raw_shapes.get(lhs, "?") if lhs else "?"
                 total.top_dots.append((f"{lsh[:40]} . -> {res[:40]}", fl))
                 continue
             if op in _FREE_OPS:
@@ -229,17 +229,25 @@ class HloAnalyzer:
         return sum(shapes.get(n, 0)
                    for n in re.findall(r"%([\w.\-]+)", args))
 
+    @staticmethod
+    def _dot_lhs(rhs: str) -> str | None:
+        """First *operand name* of a dot.  Operands are rendered with a type
+        prefix (``dot(f32[16,64]{1,0} %arg, ...)``), so skip to the first
+        ``%``-prefixed token rather than matching the word after ``(``."""
+        m = re.search(r"dot\([^%)]*%([\w.\-]+)", rhs)
+        return m.group(1) if m else None
+
     def _dot_flops(self, res: str, rhs: str, raw_shapes: dict) -> float:
         out_elems = 1
         m = _SHAPE_RE.search(res)
         if m and m.group(2):
             for d in m.group(2).split(","):
                 out_elems *= int(d)
-        lhs_m = re.search(r"dot\(%?([\w.\-]+)", rhs)
+        lhs = self._dot_lhs(rhs)
         cd = re.search(r"lhs_contracting_dims={([0-9,]*)}", rhs)
         k = 1
-        if lhs_m and cd:
-            lshape = raw_shapes.get(lhs_m.group(1), "")
+        if lhs and cd:
+            lshape = raw_shapes.get(lhs, "")
             sm = _SHAPE_RE.search(lshape)
             if sm and sm.group(2):
                 dims = [int(x) for x in sm.group(2).split(",")]

@@ -227,7 +227,88 @@ def _act(x, kind: str):
     return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
 
 
+# ------------------------------------------------- fused linear epilogue
+#
+# When the dispatch config enables epilogue fusion (REPRO_FUSE_EPILOGUE or
+# dispatch.override(fuse_epilogue=True)), act(x @ W + b) runs as ONE fused
+# Pallas kernel call: the bias add and activation fold into the kernel's
+# scaled epilogue on the last K step, so the pre-activation never round-trips
+# HBM. The backward stays policy-preserving: it recomputes the pre-activation
+# with the same policy GEMM and routes dx/dW through pdot (which itself
+# dispatches), exactly like the unfused path's custom_vjp.
+#
+# NB the fused forward flattens (B, S, D) -> (B*S, D) for the 2-D kernel;
+# under GSPMD that reshape can replicate a sharded batch dim, so fusion is
+# an opt-in serving/throughput knob, not the training default.
+
+def _epilogue_act(z, activation):
+    """The exact activation set the kernel epilogue supports — keyed by the
+    same table, so fused and unfused paths can never disagree on semantics
+    (``_act``'s anything-but-gelu-means-silu default is NOT safe here)."""
+    from repro.kernels.tcec_matmul import EPILOGUE_ACTIVATIONS
+    return EPILOGUE_ACTIVATIONS[activation](z)
+
+
+def _linear_unfused(x, w, b, activation, policy):
+    z = pdot("bsd,df->bsf", x, w, policy)
+    if b is not None:
+        z = z + b
+    return _epilogue_act(z, activation)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_linear(x, w, b, activation, policy):
+    """act(x @ w + b) with the epilogue fused into the TCEC kernel when the
+    dispatch config allows it; reference pdot path otherwise.
+
+    x: (B, S, D); w: (D, F); b: (F,) or None; activation: None|"gelu"|"silu".
+    """
+    from repro.kernels import dispatch, ops
+    from repro.core.policy import get_policy
+    pol = get_policy(policy)
+    B, S, D = x.shape
+    F = w.shape[-1]
+    cfg = dispatch.config()
+    if (dispatch.epilogue_eligible(pol)
+            and min(B * S, D, F) >= cfg.min_dim):
+        x2 = x.reshape(B * S, D)
+        block = dispatch.tuned_block(B * S, F, D, pol.name)
+        out = ops.tcec_matmul(x2, w, policy=pol.name, block=block,
+                              interpret=cfg.interpret, bias=b,
+                              activation=activation)
+        return out.reshape(B, S, F)
+    return _linear_unfused(x, w, b, activation, policy)
+
+
+def _fused_linear_fwd(x, w, b, activation, policy):
+    return fused_linear(x, w, b, activation, policy), (x, w, b)
+
+
+def _fused_linear_bwd(activation, policy, res, dy):
+    x, w, b = res
+    if activation:
+        # recompute the pre-activation under the same policy (policy-
+        # preserving backward, same discipline as _make_dg's custom_vjp)
+        z = _linear_unfused(x, w, b, None, policy)
+        _, act_vjp = jax.vjp(lambda t: _epilogue_act(t, activation), z)
+        dz = act_vjp(dy)[0]
+    else:
+        dz = dy
+    dx = pdot("bsf,df->bsd", dz, w, policy)
+    dw = pdot("bsd,bsf->df", x, dz, policy)
+    db = jnp.sum(dz, axis=(0, 1)).astype(b.dtype) if b is not None else None
+    return dx.astype(x.dtype), dw.astype(w.dtype), db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
 def mlp(p, x, cfg):
+    from repro.kernels import dispatch
+    if dispatch.config().fuse_epilogue:
+        g = fused_linear(x, p["w_gate"], None, cfg.activation, cfg.policy)
+        u = fused_linear(x, p["w_up"], None, None, cfg.policy)
+        return pdot("bsf,fd->bsd", g * u, p["w_down"], cfg.policy)
     g = pdot("bsd,df->bsf", x, p["w_gate"], cfg.policy)
     u = pdot("bsd,df->bsf", x, p["w_up"], cfg.policy)
     h = _act(g, cfg.activation) * u

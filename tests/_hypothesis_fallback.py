@@ -1,0 +1,79 @@
+"""Deterministic micro-shim for ``hypothesis`` (used only when absent).
+
+Implements the tiny subset this suite uses — ``@given``, ``@settings``,
+``strategies.integers`` and ``strategies.sampled_from`` — by running the
+decorated test over a fixed, seeded set of examples.  This is *not* a
+property-based testing engine (no shrinking, no coverage-guided search);
+it exists so minimal containers without the real ``hypothesis`` package
+still execute every property test deterministically instead of erroring
+at collection time.  Install ``hypothesis`` (see pyproject's ``[dev]``
+extra) to get the real search behavior.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value=0, max_value=2**63 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(items):
+        items = list(items)
+        return _Strategy(lambda rng: rng.choice(items))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+st = strategies
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        n = getattr(fn, "_fallback_settings",
+                    {"max_examples": _DEFAULT_MAX_EXAMPLES})["max_examples"]
+
+        # NB: no functools.wraps — pytest must not see the inner function's
+        # strategy-valued parameters (it would treat them as fixtures).
+        def wrapper():
+            for i in range(n):
+                rng = random.Random(0xC0FFEE + 7919 * i)
+                args = tuple(s.example(rng) for s in arg_strats)
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+class HealthCheck:  # referenced by some suites via settings(suppress_...)
+    all = staticmethod(lambda: [])
