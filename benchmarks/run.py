@@ -5,6 +5,7 @@
 """
 import sys
 import time
+import types
 
 from . import (blocksweep, fig1_accuracy, fig4_mantissa, fig5_rounding,
                fig8_underflow, fig9_representation, fig11_exponent_range,
@@ -21,6 +22,9 @@ BENCHES = {
     "fig11": fig11_exponent_range,
     "fig13": fig13_patterns,
     "fig14": fig14_throughput,
+    "fig14attn": types.SimpleNamespace(
+        run=lambda: fig14_throughput.run_attention(smoke=True),
+        __name__="benchmarks.fig14_throughput:attention"),
     "blocksweep": blocksweep,
 }
 

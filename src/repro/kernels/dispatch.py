@@ -57,6 +57,11 @@ class DispatchConfig:
     block: tuple[int, int, int] | None = None   # override the autotuner
     interpret: bool | None = None               # None = auto (non-TPU)
     fuse_epilogue: bool = False   # models.layers fused_linear hook
+    flash_attention: bool = True  # fused attention kernel routing; the
+                                  # granular hatch REPRO_DISABLE_FLASH_ATTN
+                                  # unsets it (REPRO_DISABLE_PALLAS still
+                                  # covers attention wholesale via `enabled`)
+    attn_block: tuple[int, int] | None = None   # (bq, bk) autotuner override
 
     @staticmethod
     def from_env() -> "DispatchConfig":
@@ -65,6 +70,7 @@ class DispatchConfig:
             force=env_flag("REPRO_FORCE_PALLAS"),
             min_dim=int(os.environ.get("REPRO_PALLAS_MIN_DIM", "128")),
             fuse_epilogue=env_flag("REPRO_FUSE_EPILOGUE"),
+            flash_attention=not env_flag("REPRO_DISABLE_FLASH_ATTN"),
         )
 
 
@@ -152,6 +158,82 @@ def maybe_dispatch(a, b, policy: PrecisionPolicy, dims):
         return None
     return ops.tcec_matmul(at, bt, policy=policy.name, block=cfg.block,
                            interpret=cfg.interpret)
+
+
+# ------------------------------------------------- attention dispatch
+
+def attention_eligible(q, k, v, *, policy) -> bool:
+    """Trace-time eligibility of the fused attention kernel for these
+    operands.  True iff: split bf16 policy; TPU backend or ``force``;
+    model-layout 4-D shapes with ``H % Hkv == 0``; ``min(S, T) >=
+    min_dim``; no GSPMD mesh installed (the pdot fallbacks carry the
+    context-parallel sharding constraints — q-sequence on the model axis —
+    while a bare ``pallas_call`` would replicate attention per device;
+    sharded fused attention needs a ``shard_map`` wrapper, future work);
+    and both escape hatches off."""
+    from repro.core.policy import get_policy
+    from repro.parallel import ctx
+    cfg = _CONFIG
+    pol = get_policy(policy)
+    if not cfg.enabled or not cfg.flash_attention or not eligible_policy(pol):
+        return False
+    if ctx.current_mesh() is not None:
+        return False
+    if not (cfg.force or jax.default_backend() == "tpu"):
+        return False
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        return False
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    if (k.shape[0] != B or v.shape[:3] != k.shape[:3] or k.shape[3] != hd
+            or Hkv == 0 or H % Hkv):
+        return False
+    if min(S, T) < cfg.min_dim:
+        return False
+    # even the minimum (128, 128) block must fit VMEM — extreme-rep GQA
+    # (rep ~ 100+ query heads per KV head) declines to the XLA path
+    # instead of tripping the kernel's budget assert inside jit
+    from .tcec_attention import attn_vmem_bytes
+    from .tcec_matmul import VMEM_BUDGET
+    return attn_vmem_bytes((128, 128), H // Hkv, hd, v.shape[3],
+                           pol) <= VMEM_BUDGET
+
+
+def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
+              window=0, softcap: float | None = None):
+    """Route a model attention call to the fused TCEC flash-attention
+    kernel, or return None for the pdot-composition fallback.
+
+    Called from ``models.layers.sdpa`` (and the MLA / cross-attention
+    variants) with model-layout operands: q ``(B, S, H, hd)``, k/v
+    ``(B, T, Hkv, hd[v])``.  Eligibility mirrors :func:`maybe_dispatch`:
+    split bf16 policy, TPU backend (or ``force`` -> interpret mode),
+    ``min(S, T) >= min_dim``, and both escape hatches off
+    (``REPRO_DISABLE_PALLAS`` disables all kernels,
+    ``REPRO_DISABLE_FLASH_ATTN`` just this one).  ``window`` may be a
+    traced scalar — it feeds the kernel as a runtime operand, so the
+    decision never depends on its value.
+
+    NB the raw kernel has no VJP: differentiated call sites must go
+    through ``models.layers.sdpa`` (or ``_fused_sdpa``), whose custom_vjp
+    recomputes the backward via the pdot composition.
+    """
+    from repro.core.policy import get_policy
+    pol = get_policy(policy)
+    if not attention_eligible(q, k, v, policy=pol):
+        return None
+    cfg = _CONFIG
+    from .tcec_attention import tcec_attention
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    block = cfg.attn_block
+    if block is None:
+        block = tuning.get_attention_block(B, Hkv, H // Hkv, S, T, hd,
+                                           v.shape[3], pol.name,
+                                           causal=causal)
+    return tcec_attention(q, k, v, q_pos, k_pos, policy=pol.name,
+                          causal=causal, window=window, softcap=softcap,
+                          block=block, interpret=cfg.interpret)
 
 
 # ------------------------------------------------- epilogue-fusion hook

@@ -228,6 +228,35 @@ def _measure_block(B, M, N, K, policy_name, block, reps: int = 3,
     return best
 
 
+def _autotune_protocol(key: str, heuristic, candidates, measure,
+                       cache: BlockCache | None,
+                       max_candidates: int | None) -> tuple[tuple, dict]:
+    """The shared cache/measure/persist protocol behind every tuner:
+    cache hit -> heuristic short-circuit (never persisted, so a later TPU
+    process still measures) -> candidate sweep -> persist the winner.
+    ``heuristic``/``candidates`` are thunks; ``measure`` is ``block -> ms``
+    or None (meaning: measurement unavailable here)."""
+    cache = cache or get_cache()
+    hit = cache.get(key)
+    if hit is not None:
+        return tuple(hit["block"]), {**hit, "source": "cache"}
+
+    if measure is None:
+        block = heuristic()
+        entry = {"block": list(block), "ms": None, "source": "heuristic"}
+        cache.put(key, entry, persist=False)
+        return block, entry
+
+    cands = candidates()
+    if max_candidates:
+        cands = cands[:max_candidates]
+    timings = {blk: measure(blk) for blk in cands}
+    block = min(timings, key=timings.get)
+    entry = {"block": list(block), "ms": timings[block], "source": "measured"}
+    cache.put(key, entry, persist=True)
+    return block, {**entry, "timings": {str(k): v for k, v in timings.items()}}
+
+
 def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
              measure=None, cache: BlockCache | None = None, reps: int = 3,
              max_candidates: int | None = None,
@@ -242,35 +271,123 @@ def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
     ``measure`` is injectable: a callable ``block -> milliseconds``.  When
     ``None``, real wall-clock measurement runs iff on TPU or ``REPRO_TUNE=1``.
     """
-    cache = cache or get_cache()
-    backend = jax.default_backend()
-    key = cache_key(B, M, N, K, policy_name, backend)
-    hit = cache.get(key)
-    if hit is not None:
-        return tuple(hit["block"]), {**hit, "source": "cache"}
-
-    do_measure = measure is not None or _should_measure()
-    if not do_measure:
-        block = heuristic_block(M, N, K, policy_name)
-        entry = {"block": list(block), "ms": None, "source": "heuristic"}
-        cache.put(key, entry, persist=False)
-        return block, entry
-
-    if measure is None:
+    if measure is None and _should_measure():
         measure = lambda blk: _measure_block(B, M, N, K, policy_name, blk,
                                              reps=reps, interpret=interpret)
-    cands = candidate_blocks(M, N, K, policy_name)
-    if max_candidates:
-        cands = cands[:max_candidates]
-    timings = {blk: measure(blk) for blk in cands}
-    block = min(timings, key=timings.get)
-    entry = {"block": list(block), "ms": timings[block], "source": "measured"}
-    cache.put(key, entry, persist=True)
-    return block, {**entry, "timings": {str(k): v for k, v in timings.items()}}
+    return _autotune_protocol(
+        cache_key(B, M, N, K, policy_name, jax.default_backend()),
+        heuristic=lambda: heuristic_block(M, N, K, policy_name),
+        candidates=lambda: candidate_blocks(M, N, K, policy_name),
+        measure=measure, cache=cache, max_candidates=max_candidates)
 
 
 def get_block(M: int, N: int, K: int, policy_name: str,
               batch: int = 1) -> tuple[int, int, int]:
     """The dispatch-facing entry: tuned block if available, else heuristic."""
     block, _ = autotune(batch, M, N, K, policy_name)
+    return block
+
+
+# ----------------------------------------------------- attention namespace
+#
+# The fused flash-attention kernel (kernels/tcec_attention.py) has its own
+# (q_block, k_block) parameter space and its own VMEM working-set model
+# (attn_vmem_bytes: Q/K/V tiles + split terms + the scores tile + per-group
+# accumulators).  Entries share the same JSON cache file under a distinct
+# "attn" key namespace, so GEMM and attention winners never collide.
+
+ATTN_CANDIDATE_TILES = (128, 256, 512)
+
+
+def attn_heuristic_block(S: int, T: int, rep: int, hd: int, hdv: int,
+                         policy_name: str) -> tuple[int, int]:
+    """Largest VMEM-feasible (bq, bk) — the static fallback when no
+    measurement is available.  One definition of 'feasible': the head of
+    the same filtered list the tuner sweeps."""
+    return attn_candidate_blocks(S, T, rep, hd, hdv, policy_name)[0]
+
+
+def attn_candidate_blocks(S: int, T: int, rep: int, hd: int, hdv: int,
+                          policy_name: str,
+                          budget: int = VMEM_BUDGET) -> list[tuple[int, int]]:
+    """VMEM-feasible (bq, bk) candidates, largest-first."""
+    from .tcec_attention import attn_vmem_bytes
+    policy = get_policy(policy_name)
+    ps, pt = _round_up(S, 128), _round_up(T, 128)
+    out = []
+    for bq in ATTN_CANDIDATE_TILES:
+        if bq > ps:
+            continue
+        for bk in ATTN_CANDIDATE_TILES:
+            if bk > pt:
+                continue
+            if attn_vmem_bytes((bq, bk), rep, hd, hdv, policy) <= budget:
+                out.append((bq, bk))
+    out.sort(key=lambda b: (-(b[0] * b[1]), b))
+    return out or [(128, 128)]
+
+
+def attn_cache_key(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
+                   hdv: int, policy_name: str, backend: str,
+                   causal: bool = True) -> str:
+    s, t = _round_up(S, 128), _round_up(T, 128)
+    d, dv = _round_up(hd, 128), _round_up(hdv, 128)
+    # causal is part of the key: the kernel's block-level causal skip
+    # halves the work, so causal and non-causal sweeps favor different
+    # blocks for the same shape
+    return (f"{backend}/attn/{policy_name}/"
+            f"b{max(1, B)}_h{max(1, Hkv)}_r{rep}_s{s}_t{t}_d{d}_v{dv}"
+            f"_c{int(causal)}")
+
+
+def _measure_attention(B, Hkv, rep, S, T, hd, hdv, policy_name, block,
+                       reps: int = 3, interpret: bool | None = None,
+                       causal: bool = True) -> float:
+    """Wall-clock one padded attention kernel call (ms, best of ``reps``)."""
+    from .tcec_attention import tcec_attention
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    a = jnp.ones((B, S, Hkv * rep, hd), jnp.float32)
+    k = jnp.ones((B, T, Hkv, hd), jnp.float32)
+    v = jnp.ones((B, T, Hkv, hdv), jnp.float32)
+    run = lambda: tcec_attention(a, k, v, policy=policy_name, block=block,
+                                 causal=causal, interpret=interpret)
+    jax.block_until_ready(run())   # compile / warm up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def autotune_attention(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
+                       hdv: int, policy_name: str, *, causal: bool = True,
+                       measure=None, cache: BlockCache | None = None,
+                       reps: int = 3, max_candidates: int | None = None,
+                       interpret: bool | None = None
+                       ) -> tuple[tuple[int, int], dict]:
+    """Attention-kernel analogue of :func:`autotune`: same cache file and
+    protocol (``_autotune_protocol``), attention-specific key/candidates/
+    measurement."""
+    if measure is None and _should_measure():
+        measure = lambda blk: _measure_attention(
+            B, Hkv, rep, S, T, hd, hdv, policy_name, blk, reps=reps,
+            interpret=interpret, causal=causal)
+    return _autotune_protocol(
+        attn_cache_key(B, Hkv, rep, S, T, hd, hdv, policy_name,
+                       jax.default_backend(), causal),
+        heuristic=lambda: attn_heuristic_block(S, T, rep, hd, hdv,
+                                               policy_name),
+        candidates=lambda: attn_candidate_blocks(S, T, rep, hd, hdv,
+                                                 policy_name),
+        measure=measure, cache=cache, max_candidates=max_candidates)
+
+
+def get_attention_block(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
+                        hdv: int, policy_name: str,
+                        causal: bool = True) -> tuple[int, int]:
+    """Dispatch-facing entry for the attention kernel's (bq, bk)."""
+    block, _ = autotune_attention(B, Hkv, rep, S, T, hd, hdv, policy_name,
+                                  causal=causal)
     return block

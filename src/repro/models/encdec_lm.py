@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pdot
 from . import layers as L
@@ -49,20 +48,20 @@ def init(cfg, key):
 
 def _cross_attention(p, x, mem_k, mem_v, cfg):
     """Cross-attention; q from decoder, K/V precomputed from encoder memory.
-    Context-parallel like self-attention: q-sequence shards on model."""
-    from repro.parallel import ctx
+    Context-parallel like self-attention: q-sequence shards on model.
+
+    Routed through the shared ``layers.sdpa`` (fused kernel when dispatch
+    allows, pdot composition else) with a softcap-free cfg shim — decoder
+    softcaps never applied to cross-attention here, and the unmasked
+    non-causal case is exactly ``mha`` with an all-zero mask bias."""
+    import types
     q = pdot("bsd,dhk->bshk", x, p["wq"], cfg.policy)
-    B, S, H, hd = q.shape
-    Hkv, hdv = mem_k.shape[2], mem_v.shape[3]
-    rep = H // Hkv
-    qg = q.reshape(B, S, Hkv, rep, hd)
-    qg = ctx.constrain(qg, ctx.dp_axes(), "model", None, None, None)
-    s = pdot("bqhrd,bkhd->bhrqk", qg, mem_k, cfg.mix_policy) / np.sqrt(hd)
-    s = ctx.constrain(s, ctx.dp_axes(), None, None, "model", None)
-    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    o = pdot("bhrqk,bkhd->bqhrd", pr, mem_v, cfg.mix_policy)
-    o = ctx.constrain(o, ctx.dp_axes(), None, None, "model", None)
-    o = o.reshape(B, S, H, hdv)
+    S, T = q.shape[1], mem_k.shape[1]
+    shim = types.SimpleNamespace(mix_policy=cfg.mix_policy, attn_softcap=None)
+    o = L.sdpa(q, mem_k, mem_v, shim,
+               jnp.arange(S, dtype=jnp.int32)[None],
+               jnp.arange(T, dtype=jnp.int32)[None],
+               causal=False, window=0)
     return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
 
 

@@ -120,7 +120,17 @@ def mha(q, k, v, cfg, q_pos, k_pos, causal=True, window=0):
 def blocked_attention(q, k, v, cfg, q_pos, k_pos, causal=True, window=0,
                       q_chunk=2048, k_chunk=2048):
     """Flash-style attention: O(S·chunk) memory, online softmax over KV
-    blocks — required for the 32k prefill cells."""
+    blocks — required for the 32k prefill cells.
+
+    Causal short-circuit: a KV chunk whose every position lies strictly in
+    the causal future of the whole q chunk (``min(k_pos) > max(q_pos)``)
+    carries only ``-inf`` scores — its probability mass underflows to
+    exactly 0 — so its GEMMs are skipped via ``lax.cond`` inside the scan
+    (~2x FLOPs saved on causal prefill, ``ki > qi`` chunks for the models'
+    ``arange`` positions).  The predicate is position-based, so it is
+    correct for any nondecreasing positions (ties included), works with a
+    traced ``window``, and stays reverse-differentiable (``cond``, unlike a
+    dynamic-bound ``fori_loop``, has a VJP)."""
     B, S, H, hd = q.shape
     T, Hkv, hdv = k.shape[1], k.shape[2], v.shape[3]
     rep = H // Hkv
@@ -141,19 +151,26 @@ def blocked_attention(q, k, v, cfg, q_pos, k_pos, causal=True, window=0,
         qpos = qp[qi]
 
         def kv_step(carry, ki):
-            m, l, acc = carry
-            s = pdot("bqhrd,bkhd->bhrqk", qblk, kg[:, ki],
-                     cfg.mix_policy) * scale
-            s = ctx.constrain(s, ctx.dp_axes(), None, None, "model", None)
-            s = softcap(s, cfg.attn_softcap)
-            s = s + _mask_bias(qpos, kp[ki], causal, window)
-            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[..., None])
-            corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
-            pv = pdot("bhrqk,bkhd->bhrqd", p, vg[:, ki], cfg.mix_policy)
-            acc_new = acc * corr[..., None] + pv
-            return (m_new, l_new, acc_new), None
+            def live(c):
+                m, l, acc = c
+                s = pdot("bqhrd,bkhd->bhrqk", qblk, kg[:, ki],
+                         cfg.mix_policy) * scale
+                s = ctx.constrain(s, ctx.dp_axes(), None, None, "model",
+                                  None)
+                s = softcap(s, cfg.attn_softcap)
+                s = s + _mask_bias(qpos, kp[ki], causal, window)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                pv = pdot("bhrqk,bkhd->bhrqd", p, vg[:, ki], cfg.mix_policy)
+                acc_new = acc * corr[..., None] + pv
+                return (m_new, l_new, acc_new)
+
+            if causal:
+                needed = jnp.min(kp[ki]) <= jnp.max(qpos)
+                return jax.lax.cond(needed, live, lambda c: c, carry), None
+            return live(carry), None
 
         m0 = jnp.full((B, Hkv, rep, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, Hkv, rep, q_chunk), jnp.float32)
@@ -170,14 +187,87 @@ def blocked_attention(q, k, v, cfg, q_pos, k_pos, causal=True, window=0,
 ATTN_BLOCK_THRESHOLD = 8192
 
 
+def _sdpa_composition(q, k, v, cfg, q_pos, k_pos, causal, window):
+    """The pdot-composition path: blocked for long sequences, mha else.
+
+    Blocked needs chunk-divisible S/T; the fused kernel pads internally,
+    so shapes reachable only through the fused forward (e.g. its recompute
+    backward) fall to mha when the chunk grid doesn't divide."""
+    if (q.shape[1] >= ATTN_BLOCK_THRESHOLD
+            and q.shape[1] % 2048 == 0 and k.shape[1] % 2048 == 0):
+        return blocked_attention(q, k, v, cfg, q_pos, k_pos, causal, window)
+    return mha(q, k, v, cfg, q_pos, k_pos, causal, window)
+
+
+# The Pallas attention kernel has no VJP of its own, so the fused route is
+# wrapped in a custom_vjp whose backward *recomputes* attention through the
+# pdot composition and differentiates that — the same policy-preserving
+# recompute discipline as fused_linear's backward (flash-attention
+# backwards recompute the forward anyway; the composition's pdots carry
+# their own custom_vjp, so the gradient GEMMs still dispatch to the fused
+# GEMM kernel).  Without this, jax.grad through a dispatched attention
+# call would fail at trace time on every training step.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _fused_sdpa(q, k, v, q_pos, k_pos, window, causal, policy_name, softcap):
+    from repro.kernels import dispatch
+    out = dispatch.attention(q, k, v, policy=policy_name, q_pos=q_pos,
+                             k_pos=k_pos, causal=causal, window=window,
+                             softcap=softcap)
+    assert out is not None, "caller must pre-check dispatch.attention_eligible"
+    return out
+
+
+def _fused_sdpa_fwd(q, k, v, q_pos, k_pos, window, causal, policy_name,
+                    softcap):
+    out = _fused_sdpa(q, k, v, q_pos, k_pos, window, causal, policy_name,
+                      softcap)
+    return out, (q, k, v, q_pos, k_pos, window)
+
+
+def _fused_sdpa_bwd(causal, policy_name, softcap, res, g):
+    import types
+    q, k, v, q_pos, k_pos, window = res
+    cfg = types.SimpleNamespace(mix_policy=policy_name, attn_softcap=softcap)
+
+    def ref(q, k, v):
+        return _sdpa_composition(q, k, v, cfg, q_pos, k_pos, causal, window)
+
+    _, vjp = jax.vjp(ref, q, k, v)
+    dq, dk, dv = vjp(g.astype(jnp.float32))
+
+    def z(x):   # int operands (positions / window) take float0 cotangents
+        return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+    return dq, dk, dv, z(q_pos), z(k_pos), z(window)
+
+
+_fused_sdpa.defvjp(_fused_sdpa_fwd, _fused_sdpa_bwd)
+
+
+def sdpa(q, k, v, cfg, q_pos, k_pos, causal=True, window=0):
+    """Scaled-dot-product attention router — the single entry every model
+    self-attention variant goes through.
+
+    Takes the fused TCEC flash-attention kernel when
+    ``kernels.dispatch.attention_eligible`` says so (declines off-TPU
+    without force, for plain policies, below ``min_dim``, under a GSPMD
+    mesh, or under either escape hatch), with the recompute backward
+    above; otherwise the pdot composition — ``blocked_attention`` for long
+    sequences, materialized-scores ``mha`` else.  The composition is also
+    the kernel's verification oracle (tests/test_attention.py)."""
+    from repro.core.policy import get_policy
+    from repro.kernels import dispatch
+    if dispatch.attention_eligible(q, k, v, policy=cfg.mix_policy):
+        return _fused_sdpa(q, k, v, q_pos, k_pos, window, causal,
+                           get_policy(cfg.mix_policy).name, cfg.attn_softcap)
+    return _sdpa_composition(q, k, v, cfg, q_pos, k_pos, causal, window)
+
+
 def attention(p, x, cfg, positions, causal=True, window=0):
-    """Full attention layer: qkv -> (blocked) sdpa -> out projection."""
+    """Full attention layer: qkv -> sdpa (fused or blocked) -> out proj."""
     q, k, v = _project_qkv(p, x, cfg, positions)
-    S = x.shape[1]
-    if S >= ATTN_BLOCK_THRESHOLD:
-        o = blocked_attention(q, k, v, cfg, positions, positions, causal, window)
-    else:
-        o = mha(q, k, v, cfg, positions, positions, causal, window)
+    o = sdpa(q, k, v, cfg, positions, positions, causal, window)
     return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
 
 
@@ -199,13 +289,17 @@ def attention_decode(p, x, cfg, cache, cache_index, window=0):
     # the whole cache per step
     s = pdot("bqhrd,bkhd->bhrqk", qg, ck, "bf16")
     s = softcap(s / np.sqrt(hd), cfg.attn_softcap)
-    kpos = jnp.arange(T)
-    valid = kpos <= cache_index
-    valid &= jnp.where(window > 0, cache_index - kpos < window, True)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    # mask by k_pos <= cache_index directly: one O(T) validity vector per
+    # step (never a (T, T) _mask_bias intermediate).  A select, not an
+    # additive bias: the stale cache tail may hold non-finite garbage
+    # (inf + NEG_INF = inf, NaN + anything = NaN would leak through).
+    d = cache_index - jnp.arange(T, dtype=jnp.int32)
+    ok = d >= 0
+    ok &= jnp.where(window > 0, d < window, True)
+    s = jnp.where(ok[None, None, None, None, :], s, jnp.float32(NEG_INF))
     pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     o = pdot("bhrqk,bkhd->bqhrd", pr, cv, "bf16")
-    o = o.reshape(B, 1, H, hd)
+    o = o.reshape(B, 1, H, cv.shape[3])
     out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
     return out, {"k": ck, "v": cv}
 

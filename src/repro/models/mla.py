@@ -9,8 +9,7 @@ import numpy as np
 
 from repro.core import pdot
 from .modules import dense_init, split_keys, zeros
-from .layers import (blocked_attention, mha, rmsnorm, rope,
-                     ATTN_BLOCK_THRESHOLD, NEG_INF)
+from .layers import rmsnorm, rope, sdpa, NEG_INF
 
 
 def mla_init(key, cfg):
@@ -63,10 +62,9 @@ def mla_attention(p, x, cfg, positions):
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
         axis=-1)
-    if S >= ATTN_BLOCK_THRESHOLD:
-        o = blocked_attention(q, k, v, cfg, positions, positions, causal=True)
-    else:
-        o = mha(q, k, v, cfg, positions, positions, causal=True)
+    # sdpa routes to the fused TCEC attention kernel when dispatch allows
+    # (hd = nope+rope and hdv = v_head_dim differ; the kernel supports that)
+    o = sdpa(q, k, v, cfg, positions, positions, causal=True)
     return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
 
 

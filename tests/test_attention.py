@@ -1,0 +1,493 @@
+"""Fused TCEC flash-attention kernel: parity vs the pdot composition.
+
+The kernel runs under ``interpret=True`` on CPU.  The ``mha`` reference
+(materialized scores, the model's own fallback) is the oracle:
+
+  * **exact policy cases** — one 128-aligned K block covering the whole KV
+    length, head dim in {64, 128}, no softcap: the kernel normalizes the
+    probs tile before the split P·V product, reproducing mha's exact
+    operation sequence, and must match **bit for bit**;
+  * **tolerance cases** — multi-block online softmax, padded S/T/head
+    dims, softcap (tanh contracts differently inside vs outside the kernel
+    graph — same ULP-level effect as the fused gelu epilogue): f32-level
+    agreement.
+
+Also covers: dispatch eligibility + escape hatches (REPRO_DISABLE_PALLAS
+must restore the pure-XLA path for every attention call site), the
+attention autotuner namespace, the causal short-circuit in the XLA
+``blocked_attention`` fallback, and the decode-path mask.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.policy import get_policy
+from repro.kernels import dispatch, tuning
+from repro.kernels.tcec_attention import (NEG_INF as KERNEL_NEG_INF,
+                                          attn_vmem_bytes, tcec_attention)
+from repro.kernels.tcec_matmul import VMEM_BUDGET
+from repro.models import layers as L
+
+
+class _Cfg:
+    """Minimal stand-in for ModelConfig's attention-relevant fields."""
+    def __init__(self, mix_policy="tcec_bf16x6", attn_softcap=None):
+        self.mix_policy = mix_policy
+        self.attn_softcap = attn_softcap
+        self.policy = mix_policy
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _bits(x):
+    return np.asarray(x, dtype=np.float32).view(np.uint32)
+
+
+def _qkv(B, S, T, H, Hkv, hd, hdv, seed=0):
+    q = _rand((B, S, H, hd), seed)
+    k = _rand((B, T, Hkv, hd), seed + 1)
+    v = _rand((B, T, Hkv, hdv), seed + 2)
+    qp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    return q, k, v, qp, kp
+
+
+def test_neg_inf_constants_match():
+    """The kernel's mask bias must be the models' mask bias, exactly —
+    it's part of the bit-parity contract."""
+    assert KERNEL_NEG_INF == L.NEG_INF
+
+
+# ------------------------------------------------------------ exact cases
+
+@pytest.mark.parametrize("policy", ["tcec_bf16x3", "tcec_bf16x6"])
+@pytest.mark.parametrize("rep,hd", [(1, 64), (2, 64), (4, 64)])
+def test_kernel_bit_identical_to_mha_single_block(policy, rep, hd):
+    """Acceptance: one K block covering the 128-aligned KV length, no
+    softcap, 64-lane head dim -> the fused kernel is bit-identical to the
+    pdot composition, across GQA ratios and both split policies.  (Other
+    head dims shift XLA's reduction grouping by ULPs — those are the
+    tolerance cases below.)"""
+    Hkv = 2
+    q, k, v, qp, kp = _qkv(2, 128, 128, Hkv * rep, Hkv, hd, hd, seed=3)
+    ref = L.mha(q, k, v, _Cfg(policy), qp, kp, causal=True, window=0)
+    out = tcec_attention(q, k, v, qp, kp, policy=policy, causal=True,
+                         window=0, block=(128, 128), interpret=True)
+    assert np.array_equal(_bits(out), _bits(ref)), (policy, rep, hd)
+
+
+def test_kernel_bit_identical_padded_queries_and_bigger_kv_block():
+    """S needs padding (200 -> 256) but T is covered by one 256-block:
+    padded q rows are sliced off, real rows stay bit-exact."""
+    q, k, v, qp, kp = _qkv(1, 200, 256, 8, 2, 64, 64, seed=4)
+    ref = L.mha(q, k, v, _Cfg(), qp, kp, causal=True, window=0)
+    out = tcec_attention(q, k, v, qp, kp, policy="tcec_bf16x6", causal=True,
+                         window=0, block=(128, 256), interpret=True)
+    assert np.array_equal(_bits(out), _bits(ref))
+
+
+def test_kernel_bit_identical_non_causal():
+    q, k, v, qp, kp = _qkv(1, 128, 128, 4, 2, 64, 64, seed=5)
+    ref = L.mha(q, k, v, _Cfg(), qp, kp, causal=False, window=0)
+    out = tcec_attention(q, k, v, qp, kp, policy="tcec_bf16x6", causal=False,
+                         window=0, block=(128, 128), interpret=True)
+    assert np.array_equal(_bits(out), _bits(ref))
+
+
+# -------------------------------------------------------- tolerance cases
+
+TOL = dict(rtol=2e-6, atol=2e-6)
+
+CASES = [
+    # (desc, B, S, T, H, Hkv, hd, hdv, block, causal, window, softcap)
+    ("online-causal", 1, 256, 256, 4, 2, 64, 64, (128, 128), True, 0, None),
+    ("online-window", 1, 256, 256, 2, 2, 64, 64, (128, 128), True, 100, None),
+    ("softcap", 1, 128, 128, 4, 4, 128, 128, (128, 128), True, 0, 20.0),
+    ("softcap-window-gqa4", 1, 256, 256, 8, 2, 64, 64, (128, 128), True, 37,
+     50.0),
+    ("odd-but-aligned", 1, 384, 384, 4, 2, 64, 64, (128, 128), True, 0, None),
+    ("padded-odd-shapes", 1, 100, 200, 4, 2, 32, 32, (128, 128), True, 0,
+     None),
+    ("padded-head-dim", 1, 128, 128, 8, 8, 192, 128, (128, 128), True, 0,
+     None),
+    ("cross-shaped", 1, 128, 256, 4, 2, 64, 64, (128, 128), False, 0, None),
+]
+
+
+@pytest.mark.parametrize(
+    "desc,B,S,T,H,Hkv,hd,hdv,block,causal,window,softcap",
+    CASES, ids=[c[0] for c in CASES])
+def test_kernel_matches_mha_within_tolerance(desc, B, S, T, H, Hkv, hd, hdv,
+                                             block, causal, window, softcap):
+    # stable per-case seed — str hash() varies with PYTHONHASHSEED
+    seed = 100 + [c[0] for c in CASES].index(desc)
+    q, k, v, qp, kp = _qkv(B, S, T, H, Hkv, hd, hdv, seed=seed)
+    ref = L.mha(q, k, v, _Cfg(attn_softcap=softcap), qp, kp, causal=causal,
+                window=window)
+    out = tcec_attention(q, k, v, qp, kp, policy="tcec_bf16x6", causal=causal,
+                         window=window, softcap=softcap, block=block,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_kernel_accepts_traced_window():
+    """window may be a traced scalar (the scanned local/global layer path):
+    it feeds the kernel as a runtime operand, not a static param."""
+    q, k, v, qp, kp = _qkv(1, 256, 256, 2, 2, 64, 64, seed=9)
+
+    @jax.jit
+    def fused(w):
+        return tcec_attention(q, k, v, qp, kp, policy="tcec_bf16x6",
+                              causal=True, window=w, block=(128, 128),
+                              interpret=True)
+
+    ref = L.mha(q, k, v, _Cfg(), qp, kp, causal=True, window=77)
+    np.testing.assert_allclose(np.asarray(fused(jnp.int32(77))),
+                               np.asarray(ref), **TOL)
+
+
+# --------------------------------------------------- dispatch + routing
+
+def test_attention_dispatch_eligibility():
+    q = jnp.ones((1, 128, 4, 64))
+    k = jnp.ones((1, 128, 2, 64))
+    v = jnp.ones((1, 128, 2, 64))
+    kw = dict(force=True, interpret=True, min_dim=0, attn_block=(128, 128))
+    with dispatch.override(**kw):
+        assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is not None
+        assert dispatch.attention(q, k, v, policy="fp32") is None
+        assert dispatch.attention(q, k, v, policy="bf16") is None
+        assert dispatch.attention(q, k, v, policy="fp16_halfhalf") is None
+    with dispatch.override(**{**kw, "min_dim": 256}):
+        assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
+    # off-TPU without force: decline (the XLA fallback is the default path)
+    assert jax.default_backend() != "tpu"
+    assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
+
+
+def test_escape_hatches_cover_attention(monkeypatch):
+    q = jnp.ones((1, 128, 4, 64))
+    k = jnp.ones((1, 128, 2, 64))
+    v = jnp.ones((1, 128, 2, 64))
+    # REPRO_DISABLE_PALLAS covers attention wholesale...
+    with dispatch.override(force=True, interpret=True, min_dim=0,
+                           enabled=False):
+        assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
+    # ...and the granular hatch covers only attention
+    with dispatch.override(force=True, interpret=True, min_dim=0,
+                           flash_attention=False):
+        assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
+    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
+    assert not dispatch.DispatchConfig.from_env().enabled
+    monkeypatch.delenv("REPRO_DISABLE_PALLAS")
+    monkeypatch.setenv("REPRO_DISABLE_FLASH_ATTN", "1")
+    cfg = dispatch.DispatchConfig.from_env()
+    assert cfg.enabled and not cfg.flash_attention
+    monkeypatch.setenv("REPRO_DISABLE_FLASH_ATTN", "0")
+    assert dispatch.DispatchConfig.from_env().flash_attention
+
+
+def test_attention_layer_routes_through_kernel():
+    """models.layers.attention end to end: the fused path must agree with
+    the pure-XLA path (same layer params, same inputs)."""
+
+    class Cfg:
+        d_model, n_heads, n_kv_heads, head_dim = 64, 4, 2, 64
+        qkv_bias = False
+        qk_norm = False
+        attn_softcap = None
+        rope_theta = 10_000.0
+        norm_eps = 1e-6
+        policy = "tcec_bf16x6"
+        mix_policy = "tcec_bf16x6"
+
+    p = L.attn_init(jax.random.PRNGKey(0), Cfg)
+    x = _rand((2, 128, 64), 11)
+    pos = jnp.broadcast_to(jnp.arange(128, dtype=jnp.int32)[None], (2, 128))
+    with dispatch.override(enabled=False):
+        y_xla = L.attention(p, x, Cfg, pos, causal=True, window=0)
+    with dispatch.override(force=True, interpret=True, min_dim=0,
+                           attn_block=(128, 128)):
+        y_fused = L.attention(p, x, Cfg, pos, causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_attention_is_differentiable_and_matches_fallback_grads():
+    """Regression (review finding): the raw Pallas kernel has no VJP, so
+    sdpa's fused route must carry the recompute custom_vjp — jax.grad
+    through a dispatched attention call has to work (it's every training
+    step on TPU) and agree with the pure-XLA gradients."""
+    cfg = _Cfg()
+    q, k, v, qp, kp = _qkv(1, 128, 128, 4, 2, 64, 64, seed=19)
+
+    def loss(q, k, v):
+        return jnp.sum(L.sdpa(q, k, v, cfg, qp, kp, causal=True,
+                              window=0) ** 2)
+
+    with dispatch.override(force=True, interpret=True, min_dim=0,
+                           attn_block=(128, 128)):
+        gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    with dispatch.override(enabled=False):
+        rq, rk, rv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for g, r in [(gq, rq), (gk, rk), (gv, rv)]:
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fused_attention_grad_with_traced_window():
+    """The custom_vjp must also cope with a traced window operand (the
+    scanned local/global layer path) — its cotangent is float0."""
+    cfg = _Cfg()
+    q, k, v, qp, kp = _qkv(1, 128, 128, 2, 2, 64, 64, seed=20)
+
+    @jax.jit
+    def g(q, w):
+        return jax.grad(lambda q: jnp.sum(L.sdpa(
+            q, k, v, cfg, qp, kp, causal=True, window=w) ** 2))(q)
+
+    with dispatch.override(force=True, interpret=True, min_dim=0,
+                           attn_block=(128, 128)):
+        gq = g(q, jnp.int32(40))
+    with dispatch.override(enabled=False):
+        rq = jax.grad(lambda q: jnp.sum(L.sdpa(
+            q, k, v, cfg, qp, kp, causal=True, window=40) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(rq),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------- autotuner namespace
+
+def test_attention_autotune_namespace_roundtrip(tmp_path):
+    calls = []
+
+    def fake_measure(block):
+        calls.append(block)
+        return 1.0 + abs(block[1] - 256) / 1e3   # prefers bk=256
+
+    cache = tuning.BlockCache(path=str(tmp_path / "tune.json"))
+    blk, meta = tuning.autotune_attention(1, 2, 2, 512, 512, 128, 128,
+                                          "tcec_bf16x6",
+                                          measure=fake_measure, cache=cache)
+    assert meta["source"] == "measured" and blk[1] == 256
+    n = len(calls)
+    blk2, meta2 = tuning.autotune_attention(1, 2, 2, 512, 512, 128, 128,
+                                            "tcec_bf16x6",
+                                            measure=fake_measure, cache=cache)
+    assert blk2 == blk and meta2["source"] == "cache" and len(calls) == n
+    # attention entries live in their own key namespace — never colliding
+    # with a GEMM entry of the same shape numbers
+    key = tuning.attn_cache_key(1, 2, 2, 512, 512, 128, 128,
+                                "tcec_bf16x6", jax.default_backend())
+    assert "/attn/" in key
+    assert key != tuning.cache_key(1, 512, 512, 512, "tcec_bf16x6",
+                                   jax.default_backend())
+    # causal is part of the key: the kernel's block-level causal skip makes
+    # causal and non-causal sweeps favor different blocks
+    assert key != tuning.attn_cache_key(1, 2, 2, 512, 512, 128, 128,
+                                        "tcec_bf16x6",
+                                        jax.default_backend(), causal=False)
+
+
+def test_attention_candidates_respect_vmem_and_alignment():
+    pol = get_policy("tcec_bf16x6")
+    for blk in tuning.attn_candidate_blocks(4096, 4096, 8, 128, 128,
+                                            "tcec_bf16x6"):
+        assert all(s % 128 == 0 for s in blk)
+        assert attn_vmem_bytes(blk, 8, 128, 128, pol) <= VMEM_BUDGET
+    assert tuning.attn_candidate_blocks(128, 128, 1, 64, 64,
+                                        "tcec_bf16x6") == [(128, 128)]
+    blk = tuning.attn_heuristic_block(4096, 4096, 4, 128, 128, "tcec_bf16x6")
+    assert attn_vmem_bytes(blk, 4, 128, 128, pol) <= VMEM_BUDGET
+
+
+def test_vmem_filter_judges_padded_head_dims():
+    """Regression (review finding): the tuner filters candidates with the
+    caller's unpadded head dims, but the kernel asserts the budget on the
+    128-padded shapes — the filter must judge what actually runs, or a
+    'feasible' block aborts inside jit for high-rep GQA configs."""
+    pol = get_policy("tcec_bf16x6")
+    # the padded working set is what counts...
+    assert attn_vmem_bytes((128, 128), 16, 32, 32, pol) \
+        == attn_vmem_bytes((128, 128), 16, 128, 128, pol)
+    # ...so every candidate/heuristic block for extreme rep survives the
+    # kernel's own assert
+    for rep, hd in [(16, 32), (16, 64), (8, 192)]:
+        for blk in tuning.attn_candidate_blocks(4096, 4096, rep, hd, hd,
+                                                "tcec_bf16x6"):
+            padded = 128 * ((hd + 127) // 128)
+            assert attn_vmem_bytes(blk, rep, padded, padded,
+                                   pol) <= VMEM_BUDGET, (rep, hd, blk)
+
+
+def test_dispatch_declines_when_min_block_exceeds_vmem():
+    """Regression (review finding): extreme-rep GQA (rep ~ 128) can't fit
+    even a (128, 128) block in VMEM — eligibility must decline to the XLA
+    path instead of letting the kernel's budget assert fire inside jit."""
+    pol = get_policy("tcec_bf16x6")
+    assert attn_vmem_bytes((128, 128), 128, 128, 128, pol) > VMEM_BUDGET
+    q = jnp.ones((1, 128, 128, 128))   # H=128, Hkv=1 -> rep=128
+    k = jnp.ones((1, 128, 1, 128))
+    v = jnp.ones((1, 128, 1, 128))
+    with dispatch.override(force=True, interpret=True, min_dim=0):
+        assert not dispatch.attention_eligible(q, k, v, policy="tcec_bf16x6")
+        assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
+
+
+def test_dispatch_declines_under_mesh():
+    """The fused path carries no sharding constraints; under an installed
+    GSPMD mesh the distributed pdot fallback must keep the call."""
+    from jax.sharding import Mesh
+    from repro.parallel import ctx
+    q = jnp.ones((1, 128, 4, 64))
+    k = jnp.ones((1, 128, 2, 64))
+    v = jnp.ones((1, 128, 2, 64))
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
+    with dispatch.override(force=True, interpret=True, min_dim=0,
+                           attn_block=(128, 128)):
+        assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is not None
+        with ctx.use_mesh(mesh):
+            assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
+
+
+# ------------------------------------------- XLA fallback causal shortcut
+
+def test_blocked_attention_causal_short_circuit_matches_mha():
+    """The ki <= qi short-circuit must not change results: skipped chunks
+    carried exactly zero probability mass."""
+    cfg = _Cfg()
+    q, k, v, qp, kp = _qkv(1, 256, 256, 4, 2, 32, 32, seed=13)
+    ref = L.mha(q, k, v, cfg, qp, kp, causal=True, window=0)
+    out = L.blocked_attention(q, k, v, cfg, qp, kp, causal=True, window=0,
+                              q_chunk=64, k_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_attention_short_circuit_handles_tied_positions():
+    """Regression (review finding): the skip predicate is position-based,
+    so duplicate positions straddling a chunk boundary (packed/padded
+    sequences) still reach every chunk that carries unmasked d == 0
+    entries."""
+    cfg = _Cfg()
+    q, k, v, _, _ = _qkv(1, 128, 128, 2, 2, 32, 32, seed=21)
+    # nondecreasing with ties across the 32-wide chunk boundary
+    pos = jnp.asarray(np.arange(128) // 2, jnp.int32)[None]
+    ref = L.mha(q, k, v, cfg, pos, pos, causal=True, window=0)
+    out = L.blocked_attention(q, k, v, cfg, pos, pos, causal=True, window=0,
+                              q_chunk=32, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_attention_short_circuit_is_differentiable():
+    """Regression (review finding): the skip must use lax.cond — a
+    dynamic-bound fori_loop has no reverse-mode derivative, and
+    blocked_attention sits on the long-sequence *training* path."""
+    cfg = _Cfg()
+    q, k, v, qp, kp = _qkv(1, 128, 128, 2, 2, 32, 32, seed=22)
+
+    def loss(q):
+        return jnp.sum(L.blocked_attention(q, k, v, cfg, qp, kp, causal=True,
+                                           window=0, q_chunk=32,
+                                           k_chunk=32) ** 2)
+
+    def loss_ref(q):
+        return jnp.sum(L.mha(q, k, v, cfg, qp, kp, causal=True,
+                             window=0) ** 2)
+
+    g = jax.grad(loss)(q)
+    g_ref = jax.grad(loss_ref)(q)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_attention_full_scan_paths_unchanged():
+    """window / non-causal / traced-window calls keep the full scan."""
+    cfg = _Cfg()
+    q, k, v, qp, kp = _qkv(1, 256, 256, 2, 2, 32, 32, seed=14)
+    for causal, window in [(True, 100), (False, 0)]:
+        ref = L.mha(q, k, v, cfg, qp, kp, causal=causal, window=window)
+        out = L.blocked_attention(q, k, v, cfg, qp, kp, causal=causal,
+                                  window=window, q_chunk=64, k_chunk=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    # traced window (the scanned local/global layer path) still traces
+    out_t = jax.jit(lambda w: L.blocked_attention(
+        q, k, v, cfg, qp, kp, causal=True, window=w,
+        q_chunk=64, k_chunk=64))(jnp.int32(100))
+    ref_t = L.mha(q, k, v, cfg, qp, kp, causal=True, window=100)
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(ref_t),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- decode masking
+
+def test_attention_decode_ignores_stale_cache_tail():
+    """The decode mask is k_pos <= cache_index directly: garbage beyond the
+    write point must not leak into the output (bitwise)."""
+
+    class Cfg:
+        d_model, n_heads, n_kv_heads, head_dim = 32, 2, 1, 16
+        qkv_bias = False
+        qk_norm = False
+        attn_softcap = None
+        rope_theta = 10_000.0
+        norm_eps = 1e-6
+        policy = "fp32"
+        mix_policy = "fp32"
+
+    p = L.attn_init(jax.random.PRNGKey(1), Cfg)
+    x = _rand((1, 1, 32), 15)
+    T, ci = 16, 4
+    base = {"k": jnp.zeros((1, T, 1, 16), jnp.bfloat16),
+            "v": jnp.zeros((1, T, 1, 16), jnp.bfloat16)}
+    # non-finite garbage in K on purpose: an additive mask bias would leak
+    # it through the scores (inf + NEG_INF = inf, NaN + anything = NaN) —
+    # the mask must select.  V garbage stays finite: a zero probability
+    # times finite V is exactly 0, but 0 * NaN would be NaN in any scheme.
+    garbage = {
+        "k": base["k"].at[:, ci + 1:].set(jnp.inf).at[:, ci + 2:].set(
+            jnp.nan),
+        "v": base["v"].at[:, ci + 1:].set(jnp.bfloat16(1e30)),
+    }
+    y_clean, _ = L.attention_decode(p, x, Cfg, base, ci)
+    y_dirty, _ = L.attention_decode(p, x, Cfg, garbage, ci)
+    assert np.all(np.isfinite(np.asarray(y_dirty)))
+    assert np.array_equal(_bits(y_clean), _bits(y_dirty))
+
+
+def test_attention_decode_window_masks_old_positions():
+    """With a sliding window, cache entries older than the window are
+    masked out — decoding at ci must ignore positions <= ci - window."""
+
+    class Cfg:
+        d_model, n_heads, n_kv_heads, head_dim = 32, 2, 1, 16
+        qkv_bias = False
+        qk_norm = False
+        attn_softcap = None
+        rope_theta = 10_000.0
+        norm_eps = 1e-6
+        policy = "fp32"
+        mix_policy = "fp32"
+
+    p = L.attn_init(jax.random.PRNGKey(2), Cfg)
+    x = _rand((1, 1, 32), 16)
+    T, ci, win = 16, 8, 3
+    rng = np.random.default_rng(17)
+    cache = {"k": jnp.asarray(rng.standard_normal((1, T, 1, 16)),
+                              jnp.bfloat16),
+             "v": jnp.asarray(rng.standard_normal((1, T, 1, 16)),
+                              jnp.bfloat16)}
+    dirty = {
+        # corrupt everything outside the window [ci-win+1, ci]
+        "k": cache["k"].at[:, :ci - win + 1].set(jnp.bfloat16(1e30)),
+        "v": cache["v"].at[:, :ci - win + 1].set(jnp.bfloat16(1e30)),
+    }
+    y_clean, _ = L.attention_decode(p, x, Cfg, cache, ci, window=win)
+    y_dirty, _ = L.attention_decode(p, x, Cfg, dirty, ci, window=win)
+    assert np.array_equal(_bits(y_clean), _bits(y_dirty))
