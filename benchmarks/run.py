@@ -9,7 +9,7 @@ import types
 
 from . import (blocksweep, fig1_accuracy, fig4_mantissa, fig5_rounding,
                fig8_underflow, fig9_representation, fig11_exponent_range,
-               fig13_patterns, fig14_throughput,
+               fig13_patterns, fig14_throughput, serving_throughput,
                table12_mantissa_expectation)
 
 BENCHES = {
@@ -26,6 +26,9 @@ BENCHES = {
         run=lambda: fig14_throughput.run_attention(smoke=True),
         __name__="benchmarks.fig14_throughput:attention"),
     "blocksweep": blocksweep,
+    "serving": types.SimpleNamespace(
+        run=lambda: serving_throughput.run(smoke=True),
+        __name__="benchmarks.serving_throughput:smoke"),
 }
 
 

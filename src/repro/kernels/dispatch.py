@@ -62,6 +62,10 @@ class DispatchConfig:
                                   # unsets it (REPRO_DISABLE_PALLAS still
                                   # covers attention wholesale via `enabled`)
     attn_block: tuple[int, int] | None = None   # (bq, bk) autotuner override
+    paged_attention: bool = True  # paged decode-attention kernel routing;
+                                  # REPRO_DISABLE_PAGED_ATTN unsets it
+                                  # (REPRO_DISABLE_PALLAS still covers it)
+    paged_block: int | None = None              # pages-per-step override
 
     @staticmethod
     def from_env() -> "DispatchConfig":
@@ -71,6 +75,7 @@ class DispatchConfig:
             min_dim=int(os.environ.get("REPRO_PALLAS_MIN_DIM", "128")),
             fuse_epilogue=env_flag("REPRO_FUSE_EPILOGUE"),
             flash_attention=not env_flag("REPRO_DISABLE_FLASH_ATTN"),
+            paged_attention=not env_flag("REPRO_DISABLE_PAGED_ATTN"),
         )
 
 
@@ -234,6 +239,83 @@ def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
     return tcec_attention(q, k, v, q_pos, k_pos, policy=pol.name,
                           causal=causal, window=window, softcap=softcap,
                           block=block, interpret=cfg.interpret)
+
+
+# -------------------------------------------- paged decode-attention
+#
+# Decode-time attention against the serving engine's paged KV cache
+# (serving/kv_cache.py): K/V live in fixed-size pages of a shared pool,
+# addressed through per-sequence block tables.  The fused kernel
+# (kernels/tcec_paged_attention.py) gathers the pages via scalar-prefetch
+# BlockSpecs and runs TCEC-split QK^T / P·V; the fallback (the caller's
+# gather + ``attention_decode`` math) is the verification oracle.
+
+def attention_decode_eligible(q, k_pages, v_pages, *, policy) -> bool:
+    """Trace-time eligibility of the paged decode-attention kernel.
+
+    True iff: split bf16 policy; TPU backend or ``force``; no GSPMD mesh
+    (same constraint as :func:`attention_eligible`); decode-layout shapes —
+    q ``(B, H, hd)``, pools ``(NP, ps, Hkv, hd[v])`` with ``H % Hkv == 0``;
+    a single page fits VMEM; and the hatches are off
+    (``REPRO_DISABLE_PALLAS`` wholesale, ``REPRO_DISABLE_PAGED_ATTN``
+    granular).  No ``min_dim`` gate: decode rows are ``rep``-tall by
+    construction — the page gather, not the tile size, is the point.
+    """
+    from repro.core.policy import get_policy
+    from repro.parallel import ctx
+    cfg = _CONFIG
+    pol = get_policy(policy)
+    if not cfg.enabled or not cfg.paged_attention or not eligible_policy(pol):
+        return False
+    if ctx.current_mesh() is not None:
+        return False
+    if not (cfg.force or jax.default_backend() == "tpu"):
+        return False
+    if q.ndim != 3 or k_pages.ndim != 4 or v_pages.ndim != 4:
+        return False
+    B, H, hd = q.shape
+    NP, ps, Hkv, hd2 = k_pages.shape
+    if (hd2 != hd or v_pages.shape[:3] != k_pages.shape[:3]
+            or Hkv == 0 or H % Hkv):
+        return False
+    from .tcec_paged_attention import paged_vmem_bytes
+    from .tcec_matmul import VMEM_BUDGET
+    return paged_vmem_bytes(1, ps, H // Hkv, hd, v_pages.shape[3],
+                            pol) <= VMEM_BUDGET
+
+
+def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
+                     window=0, softcap: float | None = None):
+    """Route a paged decode-attention call to the fused kernel, or return
+    None for the gather-and-attend fallback.
+
+    Called from ``models.layers.attention_decode_paged`` with one query
+    token per sequence slot: q ``(B, H, hd)``, pools ``(NP, ps, Hkv,
+    hd[v])``, ``block_tables`` ``(B, maxp)`` i32, ``lengths`` ``(B,)`` i32
+    counting valid tokens *including* the current one (whose K/V must
+    already be written to its page).  ``window`` may be a traced scalar.
+
+    NB the kernel is **more accurate** than the fallback: it TCEC-splits
+    the f32 query and probs where the dense decode path rounds both to
+    bf16 (tests/test_serving.py asserts the ordering against an f32
+    oracle).  ``REPRO_DISABLE_PAGED_ATTN=1`` restores exact dense parity.
+    """
+    from repro.core.policy import get_policy
+    pol = get_policy(policy)
+    if not attention_decode_eligible(q, k_pages, v_pages, policy=pol):
+        return None
+    cfg = _CONFIG
+    from .tcec_paged_attention import tcec_paged_attention
+    B, H, hd = q.shape
+    NP, ps, Hkv, _ = k_pages.shape
+    g = cfg.paged_block
+    if g is None:
+        g = tuning.get_paged_block(B, Hkv, H // Hkv, block_tables.shape[1],
+                                   ps, hd, v_pages.shape[3], pol.name)
+    return tcec_paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                                policy=pol.name, window=window,
+                                softcap=softcap, pages_per_step=g,
+                                interpret=cfg.interpret)
 
 
 # ------------------------------------------------- epilogue-fusion hook

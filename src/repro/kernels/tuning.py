@@ -391,3 +391,101 @@ def get_attention_block(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
     block, _ = autotune_attention(B, Hkv, rep, S, T, hd, hdv, policy_name,
                                   causal=causal)
     return block
+
+
+# ------------------------------------------------------- paged namespace
+#
+# The paged decode-attention kernel (kernels/tcec_paged_attention.py) has a
+# single tunable: ``pages_per_step`` — how many KV pages each grid step
+# gathers through the block table into one (G*page_size)-column VMEM tile.
+# Bigger G means larger MXU tiles and fewer grid steps but a bigger VMEM
+# working set (paged_vmem_bytes is the capacity filter).  Winners share the
+# same JSON cache file under the ``backend/paged/...`` key namespace.
+
+PAGED_CANDIDATE_STEPS = (1, 2, 4, 8, 16, 32)
+
+
+def paged_candidate_blocks(maxp: int, ps: int, rep: int, hd: int, hdv: int,
+                           policy_name: str,
+                           budget: int = VMEM_BUDGET) -> list[int]:
+    """VMEM-feasible pages-per-step candidates, largest-first."""
+    from .tcec_paged_attention import paged_vmem_bytes
+    policy = get_policy(policy_name)
+    out = [g for g in PAGED_CANDIDATE_STEPS
+           if g <= max(1, maxp)
+           and paged_vmem_bytes(g, ps, rep, hd, hdv, policy) <= budget]
+    out.sort(reverse=True)
+    return out or [1]
+
+
+def paged_heuristic_block(maxp: int, ps: int, rep: int, hd: int, hdv: int,
+                          policy_name: str) -> int:
+    """Largest feasible G whose gathered tile reaches the 128-lane MXU
+    (``G*ps >= 128`` when the page budget allows), else the feasible head."""
+    cands = paged_candidate_blocks(maxp, ps, rep, hd, hdv, policy_name)
+    aligned = [g for g in cands if g * ps >= 128]
+    return (aligned[-1] if aligned else cands[0])
+
+
+def paged_cache_key(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
+                    hdv: int, policy_name: str, backend: str) -> str:
+    d, dv = _round_up(hd, 128), _round_up(hdv, 128)
+    return (f"{backend}/paged/{policy_name}/"
+            f"b{max(1, B)}_h{max(1, Hkv)}_r{rep}_p{max(1, maxp)}_ps{ps}"
+            f"_d{d}_v{dv}")
+
+
+def _measure_paged(B, Hkv, rep, maxp, ps, hd, hdv, policy_name, g,
+                   reps: int = 3, interpret: bool | None = None) -> float:
+    """Wall-clock one paged decode-attention call (ms, best of ``reps``)."""
+    from .tcec_paged_attention import tcec_paged_attention
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    NP = max(2, B * maxp + 1)
+    q = jnp.ones((B, Hkv * rep, hd), jnp.float32)
+    kp = jnp.ones((NP, ps, Hkv, hd), jnp.bfloat16)
+    vp = jnp.ones((NP, ps, Hkv, hdv), jnp.bfloat16)
+    bt = (jnp.arange(B * maxp, dtype=jnp.int32).reshape(B, maxp) % (NP - 1)
+          + 1)
+    lens = jnp.full((B,), maxp * ps, jnp.int32)
+    run = lambda: tcec_paged_attention(q, kp, vp, bt, lens,
+                                       policy=policy_name, pages_per_step=g,
+                                       interpret=interpret)
+    jax.block_until_ready(run())   # compile / warm up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def autotune_paged(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
+                   hdv: int, policy_name: str, *, measure=None,
+                   cache: BlockCache | None = None, reps: int = 3,
+                   max_candidates: int | None = None,
+                   interpret: bool | None = None) -> tuple[int, dict]:
+    """Paged-kernel analogue of :func:`autotune`: same cache file and
+    protocol, pages-per-step candidate space.  Entries store the winner as
+    a one-element ``block`` list so the JSON schema stays uniform."""
+    if measure is None and _should_measure():
+        measure = lambda g: _measure_paged(B, Hkv, rep, maxp, ps, hd, hdv,
+                                           policy_name, g, reps=reps,
+                                           interpret=interpret)
+    wrapped = None if measure is None else (lambda blk: measure(blk[0]))
+    block, meta = _autotune_protocol(
+        paged_cache_key(B, Hkv, rep, maxp, ps, hd, hdv, policy_name,
+                        jax.default_backend()),
+        heuristic=lambda: (paged_heuristic_block(maxp, ps, rep, hd, hdv,
+                                                 policy_name),),
+        candidates=lambda: [(g,) for g in paged_candidate_blocks(
+            maxp, ps, rep, hd, hdv, policy_name)],
+        measure=wrapped, cache=cache, max_candidates=max_candidates)
+    return block[0], meta
+
+
+def get_paged_block(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
+                    hdv: int, policy_name: str) -> int:
+    """Dispatch-facing entry for the paged kernel's pages-per-step."""
+    g, _ = autotune_paged(B, Hkv, rep, maxp, ps, hd, hdv, policy_name)
+    return g

@@ -1,7 +1,21 @@
-"""Batched serving CLI: prefill a batch of prompts, then greedy-decode.
+"""Serving CLI + back-compat ``generate`` over the continuous-batching
+engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+      --batch 4 --prompt-len 16 --gen 32 --temperature 0.8 --top-k 40
+
+Two code paths, one contract:
+
+  * :func:`generate` — the legacy batch API ``(B, P) -> (B, gen_len)``,
+    now a thin wrapper over :class:`repro.serving.Engine` (paged KV cache,
+    single-shot jitted prefill) for the KV-cache families; its greedy
+    output is token-identical to :func:`generate_dense` on smoke configs
+    (asserted by tests and the serving benchmark's ``--smoke`` gate).
+  * :func:`generate_dense` — the dense-cache reference loop, kept as the
+    engine's verification oracle and as the fallback for families without
+    a paged decode path (SSM/hybrid/enc-dec/VLM).  Its prompt prefill is
+    ONE jitted sequence-level forward (``model.prefill``) where the family
+    supports it — not P sequential decode steps.
 """
 from __future__ import annotations
 
@@ -16,19 +30,34 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models import get_model
 
 
-def generate(cfg, params, prompts, gen_len: int, greedy=True, seed=0):
-    """prompts: (B, P) int32. Prefill via decode-steps (single code path),
-    then autoregressive decode. Returns (B, gen_len)."""
+def fill_dense_cache(cache, kv):
+    """Place a sequence-level prefill's K/V (leaves (nL, B, P, ...)) into
+    a dense cache tree (leaves (nL, B, max_len, ...))."""
+    return jax.tree.map(
+        lambda c, k: jax.lax.dynamic_update_slice(
+            c, k.astype(c.dtype), (0,) * c.ndim),
+        cache, kv)
+
+
+def generate_dense(cfg, params, prompts, gen_len: int, greedy=True, seed=0):
+    """Dense-cache reference: batch of same-length prompts, fixed
+    ``gen_len``.  Prefill is one jitted forward when the family supports
+    it (KV-cache families), else the legacy decode-step loop."""
     model = get_model(cfg)
     B, P = prompts.shape
     max_len = P + gen_len + 1
     cache = model.init_cache(B, max_len)
     step = jax.jit(model.decode_step)
 
-    tok = prompts[:, 0]
-    logits = None
-    for i in range(P):
-        logits, cache = step(params, cache, prompts[:, i], i)
+    if model.prefill is not None:
+        logits_all, kv = jax.jit(lambda p, t: model.prefill(p, t))(
+            params, prompts)
+        cache = fill_dense_cache(cache, kv)
+        logits = logits_all[:, -1]
+    else:
+        logits = None
+        for i in range(P):
+            logits, cache = step(params, cache, prompts[:, i], i)
     out = []
     key = jax.random.PRNGKey(seed)
     for i in range(gen_len):
@@ -42,6 +71,32 @@ def generate(cfg, params, prompts, gen_len: int, greedy=True, seed=0):
     return jnp.stack(out, axis=1)
 
 
+def generate(cfg, params, prompts, gen_len: int, greedy=True, seed=0):
+    """Back-compat batch API: prompts (B, P) int32 -> (B, gen_len).
+
+    Routes through the continuous-batching engine (paged KV cache,
+    single-shot prefill) for the KV-cache families; greedy output stays
+    token-identical to :func:`generate_dense`.  Families without a paged
+    decode path fall back to the dense loop unchanged."""
+    from repro.serving import DEFAULT_PAGE_SIZE, Engine, SamplingParams
+    model = get_model(cfg)
+    if model.decode_step_paged is None:
+        return generate_dense(cfg, params, prompts, gen_len, greedy, seed)
+    B, P = prompts.shape
+    ps = DEFAULT_PAGE_SIZE
+    pages_per_seq = -(-(P + gen_len + 1) // ps)
+    engine = Engine(cfg, params, max_slots=B,
+                    num_pages=1 + B * pages_per_seq, page_size=ps,
+                    max_pages_per_slot=pages_per_seq)
+    sps = [SamplingParams(temperature=0.0 if greedy else 1.0,
+                          max_tokens=gen_len, seed=seed + i)
+           for i in range(B)]
+    rids = [engine.add_request(np.asarray(prompts[i]), sps[i])
+            for i in range(B)]
+    out = engine.run()
+    return jnp.asarray(np.stack([out[r] for r in rids]), jnp.int32)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
@@ -50,6 +105,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (per-request; engine families only)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="decode batch width (0 = --batch): smaller forces "
+                         "queueing, exercising continuous batching")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -63,13 +125,38 @@ def main():
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
+
+    if model.decode_step_paged is None:
+        t0 = time.time()
+        out = generate(cfg, params, prompts, args.gen,
+                       greedy=args.temperature <= 0)
+        dt = time.time() - t0
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+        print("sample:", np.asarray(out[0][:16]))
+        return
+
+    from repro.serving import DEFAULT_PAGE_SIZE, Engine, SamplingParams
+    ps = DEFAULT_PAGE_SIZE
+    pages = -(-(args.prompt_len + args.gen + 1) // ps)
+    slots = args.max_slots or args.batch
+    engine = Engine(cfg, params, max_slots=slots,
+                    num_pages=1 + max(slots, args.batch) * pages,
+                    page_size=ps, max_pages_per_slot=pages)
     t0 = time.time()
-    out = generate(cfg, params, prompts, args.gen)
+    rids = [engine.add_request(
+        np.asarray(prompts[i]),
+        SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                       top_p=args.top_p, max_tokens=args.gen, seed=i))
+        for i in range(args.batch)]
+    out = engine.run()
     dt = time.time() - t0
-    toks = args.batch * args.gen
-    print(f"generated {out.shape} in {dt:.2f}s "
+    toks = sum(len(v) for v in out.values())
+    print(f"engine: {args.batch} requests, {slots} slots, "
+          f"{engine.n_prefills} prefills, {engine.n_decode_steps} decode "
+          f"steps -> {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s incl. compile)")
-    print("sample:", np.asarray(out[0][:16]))
+    print("sample:", out[rids[0]][:16])
 
 
 if __name__ == "__main__":

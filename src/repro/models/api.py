@@ -20,6 +20,10 @@ _FAMILIES = {
 
 def get_model(cfg) -> SimpleNamespace:
     mod = _FAMILIES[cfg.family]
+    # Paged serving entries exist only for the KV-cache families (lm.py:
+    # dense/moe, incl. MLA); the continuous-batching engine checks for
+    # None and the serve CLI falls back to the dense loop elsewhere.
+    paged = hasattr(mod, "decode_step_paged")
     return SimpleNamespace(
         init=lambda key: mod.init(cfg, key),
         loss_fn=lambda params, batch: mod.loss_fn(params, batch, cfg),
@@ -29,5 +33,14 @@ def get_model(cfg) -> SimpleNamespace:
             cfg, batch, max_len, **kw),
         decode_step=lambda params, cache, tokens, idx: mod.decode_step(
             params, cfg, cache, tokens, idx),
+        prefill=(lambda params, tokens, positions=None: mod.prefill(
+            params, cfg, tokens, positions)) if paged else None,
+        init_paged_cache=(lambda num_pages, page_size, **kw:
+                          mod.init_paged_cache(cfg, num_pages, page_size,
+                                               **kw)) if paged else None,
+        decode_step_paged=(lambda params, pools, block_tables, lengths,
+                           tokens: mod.decode_step_paged(
+                               params, cfg, pools, block_tables, lengths,
+                               tokens)) if paged else None,
         module=mod,
     )

@@ -271,6 +271,38 @@ def attention(p, x, cfg, positions, causal=True, window=0):
     return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
 
 
+def _decode_attend(q, ck, cv, cfg, cur_pos, window=0):
+    """One-token attention over a dense-layout cache view.
+
+    q: (B, 1, H, hd); ck/cv: (B, T, Hkv, d) — either the dense cache or a
+    page gather (serving).  ``cur_pos`` is the current token's position:
+    a scalar (dense decode, batch-uniform) or a (B,) vector (continuous
+    batching, one in-flight length per slot).
+
+    Cache dots run in bf16: the cache is already bf16 (splitting it is
+    pointless — the residual is exactly zero) and f32 upcasts would copy
+    the whole cache per step.
+    """
+    B, T, Hkv = ck.shape[0], ck.shape[1], ck.shape[2]
+    H, hd = q.shape[2], q.shape[3]
+    rep = H // Hkv
+    qg = q.reshape(B, 1, Hkv, rep, hd)
+    s = pdot("bqhrd,bkhd->bhrqk", qg, ck, "bf16")
+    s = softcap(s / np.sqrt(hd), cfg.attn_softcap)
+    # mask by k_pos <= cur_pos directly: one O(T) validity vector per
+    # step (never a (T, T) _mask_bias intermediate).  A select, not an
+    # additive bias: the stale cache tail may hold non-finite garbage
+    # (inf + NEG_INF = inf, NaN + anything = NaN would leak through).
+    cur = jnp.asarray(cur_pos, jnp.int32).reshape(-1, 1)      # (B or 1, 1)
+    d = cur - jnp.arange(T, dtype=jnp.int32)[None]            # (B or 1, T)
+    ok = d >= 0
+    ok &= jnp.where(window > 0, d < window, True)
+    s = jnp.where(ok[:, None, None, None, :], s, jnp.float32(NEG_INF))
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = pdot("bhrqk,bkhd->bqhrd", pr, cv, "bf16")
+    return o.reshape(B, 1, H, cv.shape[3])
+
+
 def attention_decode(p, x, cfg, cache, cache_index, window=0):
     """One-token decode against a (B, T, Hkv, d) KV cache."""
     B = x.shape[0]
@@ -280,26 +312,58 @@ def attention_decode(p, x, cfg, cache, cache_index, window=0):
                                       (0, cache_index, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
                                       (0, cache_index, 0, 0))
-    T, Hkv = ck.shape[1], ck.shape[2]
-    H, hd = q.shape[2], q.shape[3]
-    rep = H // Hkv
-    qg = q.reshape(B, 1, Hkv, rep, hd)
-    # cache dots run in bf16: the cache is already bf16 (splitting it is
-    # pointless — the residual is exactly zero) and f32 upcasts would copy
-    # the whole cache per step
-    s = pdot("bqhrd,bkhd->bhrqk", qg, ck, "bf16")
-    s = softcap(s / np.sqrt(hd), cfg.attn_softcap)
-    # mask by k_pos <= cache_index directly: one O(T) validity vector per
-    # step (never a (T, T) _mask_bias intermediate).  A select, not an
-    # additive bias: the stale cache tail may hold non-finite garbage
-    # (inf + NEG_INF = inf, NaN + anything = NaN would leak through).
-    d = cache_index - jnp.arange(T, dtype=jnp.int32)
-    ok = d >= 0
-    ok &= jnp.where(window > 0, d < window, True)
-    s = jnp.where(ok[None, None, None, None, :], s, jnp.float32(NEG_INF))
-    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    o = pdot("bhrqk,bkhd->bqhrd", pr, cv, "bf16")
-    o = o.reshape(B, 1, H, cv.shape[3])
+    o = _decode_attend(q, ck, cv, cfg, cache_index, window)
+    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    return out, {"k": ck, "v": cv}
+
+
+def attention_prefill(p, x, cfg, positions, window=0):
+    """Full attention layer that also returns the K/V it computed, so a
+    sequence-level prefill can fill a cache in ONE jitted forward instead
+    of S sequential ``attention_decode`` calls.  Same math as
+    :func:`attention` (the fused sdpa route included)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = sdpa(q, k, v, cfg, positions, positions, True, window)
+    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    return out, {"k": k, "v": v}
+
+
+def attention_decode_paged(p, x, cfg, pool, block_tables, lengths, window=0):
+    """One-token decode against a paged KV cache (serving engine).
+
+    x: (B, 1, d_model) — one token per sequence slot; pool: ``{"k": (NP,
+    ps, Hkv, hd), "v": (NP, ps, Hkv, hdv)}`` page arrays shared across
+    slots; block_tables: (B, maxp) i32 page indices per slot; lengths:
+    (B,) i32 tokens already cached per slot (the current token's position).
+
+    The new token's K/V is scattered into its slot's current page, then
+    attention runs through ``dispatch.attention_decode`` (the fused paged
+    kernel) when eligible, else gathers the block table into a dense view
+    and applies exactly the :func:`attention_decode` math — bitwise the
+    same attend as the dense cache path, which is what makes the engine's
+    greedy output token-identical to the legacy dense ``generate()``.
+    """
+    from repro.kernels import dispatch
+    B = x.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)            # (B, 1)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    ps = pool["k"].shape[1]
+    maxp = block_tables.shape[1]
+    page = block_tables[jnp.arange(B), lengths // ps]         # (B,)
+    off = lengths % ps
+    ck = pool["k"].at[page, off].set(k[:, 0].astype(pool["k"].dtype))
+    cv = pool["v"].at[page, off].set(v[:, 0].astype(pool["v"].dtype))
+    fused = dispatch.attention_decode(q[:, 0], ck, cv, block_tables,
+                                      lengths + 1, policy=cfg.mix_policy,
+                                      window=window,
+                                      softcap=cfg.attn_softcap)
+    if fused is not None:
+        o = fused[:, None].astype(jnp.float32)                # (B, 1, H, hdv)
+    else:
+        Hkv, hd = ck.shape[2], ck.shape[3]
+        kg = ck[block_tables].reshape(B, maxp * ps, Hkv, hd)
+        vg = cv[block_tables].reshape(B, maxp * ps, Hkv, cv.shape[3])
+        o = _decode_attend(q, kg, vg, cfg, lengths, window)
     out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
     return out, {"k": ck, "v": cv}
 

@@ -56,6 +56,29 @@ def block_apply(p, x, cfg, positions, window, *, moe: bool):
     return x + m, aux
 
 
+def block_prefill(p, x, cfg, positions, window, *, moe: bool):
+    """``block_apply`` that also returns the block's cache entries, so a
+    sequence-level prefill fills the KV cache in one jitted forward."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        a, kv = M.mla_attention_prefill(p["attn"], h, cfg, positions)
+    else:
+        a, kv = L.attention_prefill(p["attn"], h, cfg, positions,
+                                    window=window)
+    if cfg.sandwich_norms:
+        a = L.rmsnorm(p["post_ln1"], a, cfg.norm_eps)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if moe:
+        m, aux = L.moe(p["moe"], h, cfg)
+    else:
+        m = L.mlp(p["mlp"], h, cfg)
+    if cfg.sandwich_norms:
+        m = L.rmsnorm(p["post_ln2"], m, cfg.norm_eps)
+    return x + m, aux, kv
+
+
 def block_decode(p, x, cfg, cache, cache_index, window, *, moe: bool):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if cfg.use_mla:
@@ -101,6 +124,20 @@ def stack_apply(stacked, x, cfg, positions, windows, *, moe: bool):
     return x, jnp.sum(auxs)
 
 
+def stack_prefill(stacked, x, cfg, positions, windows, *, moe: bool):
+    """``stack_apply`` that stacks each layer's cache entries as scan ys:
+    leaves come back as (n_layers, B, S, ...)."""
+    def body(carry, xs):
+        lp, w = xs
+        y, aux, kv = block_prefill(lp, carry, cfg, positions, w, moe=moe)
+        return y, (aux, kv)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (auxs, kvs) = jax.lax.scan(body, x, (stacked, jnp.asarray(windows)))
+    return x, jnp.sum(auxs), kvs
+
+
 def stack_decode(stacked, x, cfg, caches, cache_index, windows, *, moe: bool):
     def body(carry, xs):
         lp, cache, w = xs
@@ -110,6 +147,43 @@ def stack_decode(stacked, x, cfg, caches, cache_index, windows, *, moe: bool):
     x, new_caches = jax.lax.scan(body, x, (stacked, caches,
                                            jnp.asarray(windows)))
     return x, new_caches
+
+
+def block_decode_paged(p, x, cfg, pool, block_tables, lengths, window, *,
+                       moe: bool):
+    """``block_decode`` against one layer's page pool (serving engine)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        a, new_pool = M.mla_decode_paged(p["attn"], h, cfg, pool,
+                                         block_tables, lengths)
+    else:
+        a, new_pool = L.attention_decode_paged(p["attn"], h, cfg, pool,
+                                               block_tables, lengths,
+                                               window=window)
+    if cfg.sandwich_norms:
+        a = L.rmsnorm(p["post_ln1"], a, cfg.norm_eps)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, _ = L.moe(p["moe"], h, cfg)
+    else:
+        m = L.mlp(p["mlp"], h, cfg)
+    if cfg.sandwich_norms:
+        m = L.rmsnorm(p["post_ln2"], m, cfg.norm_eps)
+    return x + m, new_pool
+
+
+def stack_decode_paged(stacked, x, cfg, pools, block_tables, lengths,
+                       windows, *, moe: bool):
+    def body(carry, xs):
+        lp, pool, w = xs
+        y, npool = block_decode_paged(lp, carry, cfg, pool, block_tables,
+                                      lengths, w, moe=moe)
+        return y, npool
+
+    x, new_pools = jax.lax.scan(body, x, (stacked, pools,
+                                          jnp.asarray(windows)))
+    return x, new_pools
 
 
 # ----------------------------------------------------------- top level
@@ -244,6 +318,98 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         caches["moe_blocks"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_moe,) + a.shape).copy(), one(0))
     return caches
+
+
+def prefill(params, cfg, tokens, positions=None):
+    """Sequence-level prefill: ONE jitted forward through the fused sdpa
+    route that returns both the logits and every layer's cache entries —
+    replacing the legacy O(P) sequential ``decode_step`` prompt loop.
+
+    tokens: (B, P) int32 (right-pad prompts; causal masking keeps padded
+    tails from influencing earlier positions).  Returns ``(logits
+    (B, P, V), kv)`` where ``kv`` mirrors the :func:`init_cache` tree with
+    leaves (n_layers, B, P, ...) — callers place them into a dense cache
+    (``launch/serve.py``) or scatter them into pages (``serving/engine``).
+    """
+    B, P = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None],
+                                     (B, P))
+    x = embed(params, tokens, cfg)
+    windows = layer_windows(cfg, cfg.n_layers)
+    nd = cfg.first_dense_layers
+    n_moe = (cfg.n_layers - nd) if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    kv = {}
+    if n_dense:
+        x, _, kvs = stack_prefill(params["dense_blocks"], x, cfg, positions,
+                                  windows[:n_dense], moe=False)
+        kv["dense_blocks"] = kvs
+    if n_moe:
+        x, _, kvs = stack_prefill(params["moe_blocks"], x, cfg, positions,
+                                  windows[n_dense:], moe=True)
+        kv["moe_blocks"] = kvs
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return unembed_logits(params, x, cfg), kv
+
+
+def init_paged_cache(cfg, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """Paged KV cache: the :func:`init_cache` tree with the dense (B, T)
+    token axis replaced by a (num_pages, page_size) page pool shared
+    across sequences (per-sequence block tables live in the serving
+    engine).  Page 0 is the engine's scrap page — inactive slots write
+    into it."""
+    def one(_):
+        if cfg.use_mla:
+            return {"c_kv": jnp.zeros((num_pages, page_size,
+                                       cfg.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((num_pages, page_size,
+                                         cfg.qk_rope_dim), dtype)}
+        return {"k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                                cfg.head_dim), dtype)}
+    nd = cfg.first_dense_layers
+    n_moe = (cfg.n_layers - nd) if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    pools = {}
+    if n_dense:
+        pools["dense_blocks"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_dense,) + a.shape).copy(), one(0))
+    if n_moe:
+        pools["moe_blocks"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_moe,) + a.shape).copy(), one(0))
+    return pools
+
+
+def decode_step_paged(params, cfg, pools, block_tables, lengths, tokens):
+    """One decode step against the paged cache with per-slot lengths.
+
+    tokens: (B,) int32 — one token per sequence slot; block_tables: (B,
+    maxp) i32; lengths: (B,) i32 tokens already cached per slot (the
+    current token's position — slots at unequal depths decode together,
+    which is what continuous batching is).  Returns (logits (B, V),
+    new_pools)."""
+    x = embed(params, tokens[:, None], cfg)
+    windows = layer_windows(cfg, cfg.n_layers)
+    nd = cfg.first_dense_layers
+    n_moe = (cfg.n_layers - nd) if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    new_pools = {}
+    if n_dense:
+        x, npool = stack_decode_paged(params["dense_blocks"], x, cfg,
+                                      pools["dense_blocks"], block_tables,
+                                      lengths, windows[:n_dense], moe=False)
+        new_pools["dense_blocks"] = npool
+    if n_moe:
+        x, npool = stack_decode_paged(params["moe_blocks"], x, cfg,
+                                      pools["moe_blocks"], block_tables,
+                                      lengths, windows[n_dense:], moe=True)
+        new_pools["moe_blocks"] = npool
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed_logits(params, x, cfg)
+    return logits[:, 0], new_pools
 
 
 def decode_step(params, cfg, cache, tokens, cache_index):

@@ -51,6 +51,14 @@ def _kv_compress(p, x, cfg, positions):
 
 def mla_attention(p, x, cfg, positions):
     """Prefill/train path: decompress K/V, run (blocked) attention."""
+    out, _ = mla_attention_prefill(p, x, cfg, positions)
+    return out
+
+
+def mla_attention_prefill(p, x, cfg, positions):
+    """:func:`mla_attention` that also returns the compressed cache
+    entries ``(c_kv, k_rope)`` it computed, so a sequence-level prefill
+    fills the latent cache in one jitted forward."""
     B, S, D = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -65,7 +73,8 @@ def mla_attention(p, x, cfg, positions):
     # sdpa routes to the fused TCEC attention kernel when dispatch allows
     # (hd = nope+rope and hdv = v_head_dim differ; the kernel supports that)
     o = sdpa(q, k, v, cfg, positions, positions, causal=True)
-    return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 
 def mla_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -75,12 +84,31 @@ def mla_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     }
 
 
+def _mla_attend(p, q_c, q_rope, ck, kr, cfg, cur_pos):
+    """Absorbed-space attend over a dense-layout latent cache view.
+
+    q_c: (B, 1, H, kvr); q_rope: (B, 1, H, dr); ck/kr: (B, T, kvr)/(B, T,
+    dr) — the dense latent cache or a page gather.  ``cur_pos`` is the
+    current token's position: scalar (dense decode) or (B,) vector
+    (continuous batching).  bf16 cache dots: no f32 cache copies."""
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    s_c = pdot("bshr,btr->bhst", q_c, ck, "bf16")
+    s_r = pdot("bshk,btk->bhst", q_rope, kr, "bf16")
+    s = (s_c + s_r) / np.sqrt(dn + dr)
+    T = ck.shape[1]
+    cur = jnp.asarray(cur_pos, jnp.int32).reshape(-1, 1)      # (B or 1, 1)
+    valid = jnp.arange(T, dtype=jnp.int32)[None] <= cur       # (B or 1, T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    ctx = pdot("bhst,btr->bshr", pr, ck, "bf16")
+    o = pdot("bshr,rhk->bshk", ctx, p["w_uv"], cfg.policy)    # (B,1,H,dv)
+    return pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+
+
 def mla_decode(p, x, cfg, cache, cache_index):
     """Absorbed decode: attention runs in the compressed (kv_lora) space;
     cache traffic is (kv_lora + rope_dim) per token instead of 2*H*d."""
     B = x.shape[0]
-    H, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
-                     cfg.v_head_dim)
     positions = jnp.full((B, 1), cache_index, dtype=jnp.int32)
     q_nope, q_rope = _q_proj(p, x, cfg, positions)
     c_kv_t, k_rope_t = _kv_compress(p, x, cfg, positions)
@@ -91,14 +119,35 @@ def mla_decode(p, x, cfg, cache, cache_index):
         (0, cache_index, 0))
     # absorb W_uk into the query: q_c = q_nope @ W_uk  -> compressed space
     q_c = pdot("bshk,rhk->bshr", q_nope, p["w_uk"], cfg.policy)  # (B,1,H,kvr)
-    s_c = pdot("bshr,btr->bhst", q_c, ck, "bf16")    # bf16 cache dots:
-    s_r = pdot("bshk,btk->bhst", q_rope, kr, "bf16") # no f32 cache copies
-    s = (s_c + s_r) / np.sqrt(dn + dr)
-    T = ck.shape[1]
-    valid = jnp.arange(T) <= cache_index
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
-    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    ctx = pdot("bhst,btr->bshr", pr, ck, "bf16")
-    o = pdot("bshr,rhk->bshk", ctx, p["w_uv"], cfg.policy)       # (B,1,H,dv)
-    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    out = _mla_attend(p, q_c, q_rope, ck, kr, cfg, cache_index)
+    return out, {"c_kv": ck, "k_rope": kr}
+
+
+def mla_decode_paged(p, x, cfg, pool, block_tables, lengths):
+    """Absorbed decode against a paged latent cache (serving engine).
+
+    pool: ``{"c_kv": (NP, ps, kvr), "k_rope": (NP, ps, dr)}`` page arrays;
+    block_tables: (B, maxp) i32; lengths: (B,) i32 tokens already cached
+    (the current token's position).  The compressed cache is already the
+    bandwidth-optimal layout, and the absorbed attend is a rank-space
+    contraction the standard-layout paged kernel cannot express — so MLA
+    always takes the page-gather + :func:`_mla_attend` path (bitwise the
+    dense ``mla_decode`` math; ``dispatch.attention_decode`` declines the
+    latent shapes anyway)."""
+    B = x.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    c_kv_t, k_rope_t = _kv_compress(p, x, cfg, positions)
+    ps = pool["c_kv"].shape[1]
+    maxp = block_tables.shape[1]
+    page = block_tables[jnp.arange(B), lengths // ps]
+    off = lengths % ps
+    ck = pool["c_kv"].at[page, off].set(
+        c_kv_t[:, 0].astype(pool["c_kv"].dtype))
+    kr = pool["k_rope"].at[page, off].set(
+        k_rope_t[:, 0].astype(pool["k_rope"].dtype))
+    q_c = pdot("bshk,rhk->bshr", q_nope, p["w_uk"], cfg.policy)
+    ckg = ck[block_tables].reshape(B, maxp * ps, ck.shape[-1])
+    krg = kr[block_tables].reshape(B, maxp * ps, kr.shape[-1])
+    out = _mla_attend(p, q_c, q_rope, ckg, krg, cfg, lengths)
     return out, {"c_kv": ck, "k_rope": kr}

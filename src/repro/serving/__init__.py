@@ -1,0 +1,10 @@
+"""Serving subsystem: paged KV cache, continuous batching, per-request
+sampling — the third kernel-backed subsystem after GEMM dispatch and flash
+attention.  See docs/serving.md."""
+from .engine import Engine
+from .kv_cache import DEFAULT_PAGE_SIZE, PagePool
+from .sampling import SamplingParams
+from .scheduler import Request, RequestState, Scheduler
+
+__all__ = ["Engine", "PagePool", "SamplingParams", "Request",
+           "RequestState", "Scheduler", "DEFAULT_PAGE_SIZE"]

@@ -1,0 +1,285 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The legacy ``launch/serve.py`` loop was a research artifact: same-length
+prompts only, prefill via P sequential decode steps, a dense per-batch
+cache, one batch-wide sampling mode, and exactly ``gen_len`` tokens for
+everyone.  This engine serves a *stream* of requests:
+
+  * **admission**: waiting requests are admitted FIFO whenever a slot and
+    enough pages are free (``scheduler.py``); admissions with the same
+    padded prompt length prefill together as one batch;
+  * **prefill**: ONE jitted sequence-level forward (``models.lm.prefill``,
+    through the fused sdpa route) returns last-token logits and every
+    layer's K/V, which are scattered into freshly allocated pages — no
+    more O(P) decode-step prompt loops;
+  * **decode**: one jitted step advances *every* in-flight slot — whatever
+    mix of requests, depths, and sampling parameters is resident — through
+    ``models.lm.decode_step_paged`` (the paged TCEC kernel via
+    ``dispatch.attention_decode`` when eligible, the page-gather fallback
+    otherwise) and one vectorized :func:`serving.sampling.sample` call;
+  * **completion**: stop tokens / ``max_tokens`` finish a request on the
+    host; its slot and pages recycle into the next admission immediately —
+    the batch never drains to a barrier;
+  * **preemption**: when the pool runs dry, the youngest running request
+    is evicted (recompute-style: its pages are freed, its tokens kept) and
+    re-admitted later.
+
+Numerics contract (tests/test_serving.py): with the paged kernel hatch
+closed (CPU default), greedy engine output is **token-identical** to the
+dense-cache ``launch.serve.generate_dense`` path — the page gather feeds
+bitwise the same attend as the dense cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+from . import sampling
+from .kv_cache import (DEFAULT_PAGE_SIZE, PagePool, inverse_permutation,
+                       permute_pages, write_prompt_pages)
+from .sampling import SamplingParams
+from .scheduler import Request, RequestState, Scheduler
+
+
+class Engine:
+    """Continuous-batching engine for the KV-cache model families
+    (``dense``/``moe``, including MLA and sliding-window variants).
+
+    max_slots: decode batch width (static — inactive slots are masked).
+    num_pages: pool size including the reserved scrap page 0.
+    page_size: tokens per page.
+    max_pages_per_slot: block-table width; a request that outgrows it is
+        finished early (length cap), like any server's max context.
+    """
+
+    def __init__(self, cfg, params, *, max_slots: int = 4,
+                 num_pages: int | None = None,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 max_pages_per_slot: int | None = None):
+        model = get_model(cfg)
+        if model.decode_step_paged is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged decode path; use "
+                "launch.serve.generate_dense")
+        if num_pages is None:
+            num_pages = 1 + max_slots * 32
+        if max_pages_per_slot is None:
+            max_pages_per_slot = min(64, num_pages - 1)
+        self.cfg = cfg
+        self.params = params
+        self.model = model
+        self.pool = PagePool(num_pages, page_size)
+        self.sched = Scheduler(self.pool, max_slots)
+        self.max_slots = max_slots
+        self.max_pages_per_slot = max_pages_per_slot
+        self.pools = model.init_paged_cache(num_pages, page_size)
+        # host mirrors of the per-slot device state
+        self.block_tables = np.zeros((max_slots, max_pages_per_slot),
+                                     np.int32)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.next_tok = np.zeros((max_slots,), np.int32)
+        self.temps = np.zeros((max_slots,), np.float32)
+        self.topks = np.zeros((max_slots,), np.int32)
+        self.topps = np.ones((max_slots,), np.float32)
+        self.keys = jnp.zeros((max_slots, 2), jnp.uint32)
+        self._requests: dict[int, Request] = {}
+        # donate the pool buffers (arg 1): every step rebinds self.pools,
+        # so off-CPU the page update runs in place instead of copying the
+        # whole cache per token (CPU XLA lacks donation and would warn)
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._decode = jax.jit(functools.partial(_decode_and_sample,
+                                                 model=model, cfg=cfg),
+                               donate_argnums=donate)
+        self._prefill = jax.jit(lambda p, toks: model.prefill(p, toks))
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+
+    # ------------------------------------------------------------ intake
+
+    def add_request(self, prompt, params: SamplingParams | None = None) -> int:
+        params = params or SamplingParams()
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        assert params.max_tokens >= 1
+        need = self.pool.pages_for(len(prompt) + 1)
+        if need > min(self.max_pages_per_slot, self.pool.num_pages - 1):
+            raise ValueError(f"prompt needs {need} pages; engine caps at "
+                             f"{self.max_pages_per_slot} per slot")
+        req = self.sched.add(prompt, params)
+        req.key = jax.random.PRNGKey(params.seed)
+        self._requests[req.rid] = req
+        return req.rid
+
+    # ----------------------------------------------------------- prefill
+
+    def _admit_and_prefill(self):
+        # a preempted request may have *generated* its way past the per-slot
+        # cap (add_request only guards prompts): finish it from the queue —
+        # re-admitting would need more pages than a block-table row holds
+        for req in [r for r in self.sched.waiting
+                    if self.pool.pages_for(len(r.full_sequence) + 1)
+                    > self.max_pages_per_slot]:
+            self.sched.waiting.remove(req)
+            req.state = RequestState.FINISHED
+        admitted = self.sched.admit()
+        ps = self.pool.page_size
+        # same padded length -> one batched prefill call
+        groups: dict[int, list[Request]] = {}
+        for req in admitted:
+            seq = req.full_sequence
+            padded = max(1, -(-len(seq) // ps)) * ps
+            groups.setdefault(padded, []).append(req)
+        for padded, reqs in sorted(groups.items()):
+            toks = np.zeros((len(reqs), padded), np.int32)
+            for i, req in enumerate(reqs):
+                toks[i, :len(req.full_sequence)] = req.full_sequence
+            logits, kv = self._prefill(self.params, jnp.asarray(toks))
+            self.n_prefills += 1
+            n_prompt_pages = padded // ps
+            pages = np.asarray([req.pages[:n_prompt_pages] for req in reqs],
+                               np.int32)
+            self.pools = write_prompt_pages(self.pools, kv,
+                                            jnp.asarray(pages))
+            for i, req in enumerate(reqs):
+                plen = len(req.full_sequence)
+                self.lengths[req.slot] = plen
+                self._sync_slot(req)
+                row = jnp.asarray(logits[i, plen - 1,
+                                         :self.cfg.vocab_size], jnp.float32)
+                req.key, sub = jax.random.split(req.key)
+                tok = int(sampling.sample_one(row, req.params, sub))
+                self._accept_token(req, tok)
+
+    def _sync_slot(self, req: Request):
+        """Push a request's page list and sampling knobs into its slot."""
+        s = req.slot
+        self.block_tables[s] = 0
+        self.block_tables[s, :len(req.pages)] = req.pages
+        self.temps[s] = req.params.temperature
+        self.topks[s] = req.params.top_k
+        self.topps[s] = req.params.top_p
+        self.keys = self.keys.at[s].set(req.key)
+
+    def _clear_slot(self, slot: int):
+        self.block_tables[slot] = 0
+        self.lengths[slot] = 0
+        self.next_tok[slot] = 0
+        self.temps[slot] = 0.0
+        self.topks[slot] = 0
+        self.topps[slot] = 1.0
+
+    def _accept_token(self, req: Request, tok: int) -> bool:
+        """Host-side completion logic; returns True while still running."""
+        if tok in req.params.stop_tokens:
+            self._finish(req)
+            return False
+        req.out.append(tok)
+        if len(req.out) >= req.params.max_tokens:
+            self._finish(req)
+            return False
+        self.next_tok[req.slot] = tok
+        return True
+
+    def _finish(self, req: Request):
+        slot = req.slot
+        self.sched.finish(req)
+        self._clear_slot(slot)
+
+    # ------------------------------------------------------------ decode
+
+    def _ensure_pages(self):
+        """Every running slot must own the page its next token writes to;
+        grow (possibly preempting) before the step, not during it."""
+        ps = self.pool.page_size
+        for req in sorted(self.sched.running.values(),
+                          key=lambda r: self.sched._admitted_at[r.rid]):
+            if req.slot is None:        # preempted by an earlier grow
+                continue
+            page_idx = int(self.lengths[req.slot]) // ps
+            if page_idx >= self.max_pages_per_slot:
+                self._finish(req)       # hit the per-slot length cap
+                continue
+            if page_idx >= len(req.pages):
+                before = {r.rid: r.slot for r in self.sched.running.values()}
+                if not self.sched.grow(req):
+                    raise RuntimeError(
+                        "page pool too small for a single request")
+                for rid, slot in before.items():
+                    r = self._requests[rid]
+                    if r.slot is None:          # got preempted: mask slot
+                        self._clear_slot(slot)
+                self.block_tables[req.slot] = 0
+                self.block_tables[req.slot, :len(req.pages)] = req.pages
+
+    def _decode_step(self):
+        running = [r for r in self.sched.running.values()]
+        if not running:
+            return
+        toks, self.pools, self.keys = self._decode(
+            self.params, self.pools, jnp.asarray(self.block_tables),
+            jnp.asarray(self.lengths), jnp.asarray(self.next_tok),
+            jnp.asarray(self.temps), jnp.asarray(self.topks),
+            jnp.asarray(self.topps), self.keys)
+        self.n_decode_steps += 1
+        toks = np.asarray(toks)
+        for req in running:
+            self.lengths[req.slot] += 1      # its input token is now cached
+            req.key = self.keys[req.slot]
+            self._accept_token(req, int(toks[req.slot]))
+
+    # ------------------------------------------------------------- drive
+
+    def step(self):
+        """One engine iteration: admit + prefill, then one decode step for
+        whatever is in flight."""
+        self._admit_and_prefill()
+        self._ensure_pages()
+        self._decode_step()
+
+    def run(self, prompts=None, params=None) -> dict[int, list[int]]:
+        """Convenience driver: optionally enqueue ``prompts`` (with one
+        :class:`SamplingParams` each, or one shared), run to drain, and
+        return ``{rid: generated tokens}`` for everything enqueued since
+        construction."""
+        if prompts is not None:
+            if params is None:
+                params = [None] * len(prompts)
+            elif isinstance(params, SamplingParams):
+                params = [params] * len(prompts)
+            for prompt, sp in zip(prompts, params):
+                self.add_request(prompt, sp)
+        while self.sched.has_work:
+            self.step()
+        return {rid: list(req.out) for rid, req in self._requests.items()}
+
+    # ------------------------------------------------------------ defrag
+
+    def defragment(self):
+        """Compact live pages to the low end of the pool: permutes the
+        device page arrays and re-indexes every running request's block
+        table.  Safe between steps; output-invariant (tests assert)."""
+        mapping = self.pool.defrag()
+        perm = inverse_permutation(mapping, self.pool.num_pages)
+        self.pools = permute_pages(self.pools, perm)
+        for req in self.sched.running.values():
+            req.pages = [mapping[p] for p in req.pages]
+            self.block_tables[req.slot] = 0
+            self.block_tables[req.slot, :len(req.pages)] = req.pages
+
+
+def _decode_and_sample(params, pools, block_tables, lengths, toks, temps,
+                       topks, topps, keys, *, model, cfg):
+    """The jitted engine step: paged model decode + vectorized sampling +
+    per-slot key advance, one dispatch for the whole slot array."""
+    logits, new_pools = model.decode_step_paged(params, pools, block_tables,
+                                                lengths, toks)
+    logits = logits[:, :cfg.vocab_size].astype(jnp.float32)
+    # split convention must match the prefill draw (`key, sub = split(key)`:
+    # carry row 0, sample with row 1) — otherwise a preemption's re-prefill
+    # would resume a request's stream on the wrong side of the split
+    split = jax.vmap(jax.random.split)(keys)          # (B, 2, 2)
+    out = sampling.sample(logits, temps, topks, topps, split[:, 1])
+    return out, new_pools, split[:, 0]

@@ -1,0 +1,135 @@
+"""Paged KV-cache pool: fixed-size pages, per-sequence block tables.
+
+The legacy serving path allocated a dense ``(B, max_len)`` cache per batch
+— every request paid for the longest possible sequence, and requests of
+different lengths could not share a batch.  Here the cache is a pool of
+fixed-size pages shared by every in-flight request: a request holds
+``ceil(len / page_size)`` pages, listed in its block-table row, and frees
+them the moment it completes.  Fragmentation is bounded to one partial
+page per sequence (the vLLM PagedAttention memory model).
+
+Split of responsibilities:
+
+  * :class:`PagePool` — the host-side allocator: free-list bookkeeping
+    only, no device arrays.  Page 0 is reserved as the **scrap page**:
+    inactive engine slots point their block tables at it, so their masked
+    decode writes land somewhere harmless.
+  * the device-side page arrays live in the model tree
+    (``models.lm.init_paged_cache``) and are updated functionally inside
+    the jitted decode step; :func:`write_prompt_pages` scatters a
+    sequence-level prefill's K/V into freshly allocated pages, and
+    :func:`permute_pages` applies a defrag permutation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_PAGE_SIZE = 16
+
+# The pool arrays are the dominant serving allocation and every update
+# rebinds them, so donate the input buffers for in-place updates — except
+# on CPU, where XLA doesn't implement donation and would warn per compile.
+_DONATE = () if jax.default_backend() == "cpu" else (0,)
+
+
+class PagePool:
+    """Host-side page allocator over ``num_pages`` fixed-size pages.
+
+    LIFO free list: recently freed pages are reused first, which keeps the
+    hot working set small.  ``alloc`` is all-or-nothing — a partial grant
+    would deadlock two growing requests against each other.
+    """
+
+    def __init__(self, num_pages: int, page_size: int = DEFAULT_PAGE_SIZE):
+        assert num_pages >= 2, "need at least the scrap page + one real page"
+        assert page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # page 0 is the scrap page — never handed out
+        self._free = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` (+ nothing: callers add their
+        own growth headroom)."""
+        return max(1, -(-n_tokens // self.page_size))
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages, or None (and no change) if they don't fit."""
+        if n > len(self._free):
+            return None
+        taken = self._free[-n:][::-1]
+        del self._free[-n:]
+        return taken
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            assert 0 < p < self.num_pages, p
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(p)
+
+    def defrag(self) -> dict[int, int]:
+        """Compact live pages onto the lowest indices.
+
+        Returns the ``{old: new}`` mapping for live pages (identity
+        entries included) and rebuilds the free list above them.  Callers
+        must re-index their block tables and apply the same permutation
+        to the device page arrays (:func:`permute_pages`) — the pool only
+        does the bookkeeping.
+        """
+        live = sorted(set(range(1, self.num_pages)) - set(self._free))
+        mapping = {old: new for new, old in enumerate(live, start=1)}
+        self._free = list(range(self.num_pages - 1, len(live), -1))
+        return mapping
+
+
+# ------------------------------------------------------- device helpers
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
+def write_prompt_pages(pools, kv, pages):
+    """Scatter a sequence-level prefill's K/V into allocated pages.
+
+    pools: the ``init_paged_cache`` tree, leaves (nL, NP, ps, ...);
+    kv: the matching ``prefill`` tree, leaves (nL, B, P, ...) with ``P``
+    a multiple of ``ps`` (right-pad prompts to the page size — padded
+    positions are masked by the sequence length and overwritten as decode
+    proceeds); pages: (B, P // ps) i32 page indices per sequence.
+    """
+    flat = pages.reshape(-1)
+
+    def one(pool, k):
+        nL, B, P = k.shape[:3]
+        ps = pool.shape[2]
+        kp = k.reshape((nL, B * (P // ps), ps) + k.shape[3:])
+        return pool.at[:, flat].set(kp.astype(pool.dtype))
+
+    return jax.tree.map(one, pools, kv)
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
+def permute_pages(pools, perm):
+    """Apply a defrag permutation to the device page arrays.
+
+    perm: (NP,) i32 with ``perm[new] = old`` (identity off the live set) —
+    i.e. the inverse of :meth:`PagePool.defrag`'s ``{old: new}`` mapping.
+    """
+    return jax.tree.map(lambda pool: pool[:, perm], pools)
+
+
+def inverse_permutation(mapping: dict[int, int], num_pages: int):
+    """Turn defrag's ``{old: new}`` into the (NP,) gather index
+    ``perm[new] = old`` that :func:`permute_pages` wants."""
+    perm = list(range(num_pages))
+    for old, new in mapping.items():
+        perm[new] = old
+    return jnp.asarray(perm, jnp.int32)

@@ -1,0 +1,102 @@
+"""Per-request sampling: temperature / top-k / top-p / greedy + stop tokens.
+
+The legacy serve loop had exactly two modes — batch-wide greedy or
+batch-wide ``jax.random.categorical`` — and always generated ``gen_len``
+tokens, sailing straight past any end-of-sequence token.  Here every
+request carries its own :class:`SamplingParams`, and :func:`sample` draws
+one token per engine slot under that slot's parameters in a single jitted
+call (the per-slot knobs are traced vectors, so a mixed greedy/sampled
+batch costs one dispatch).
+
+Filtering order follows the standard serving convention: temperature
+scales the logits, top-k masks to the k highest, top-p (nucleus) keeps the
+smallest set whose probability mass reaches p — top-p is applied to the
+top-k-filtered distribution.  Rows with ``temperature <= 0`` are greedy
+argmax regardless of the other knobs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38   # matches models.layers.NEG_INF (finite: no NaN algebra)
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode parameters.
+
+    temperature: 0 (or below) means greedy argmax.
+    top_k: keep only the k highest-logit tokens (0 = off).
+    top_p: nucleus sampling — keep the smallest set of tokens whose
+        cumulative probability reaches ``top_p`` (1.0 = off).
+    max_tokens: hard cap on generated tokens.
+    stop_tokens: generation ends when one is sampled; the stop token is
+        not included in the output.
+    seed: per-request PRNG seed — a request's key stream advances once
+        per generated token regardless of batch composition, so
+        continuous batching never changes sampled output.  (Preemption
+        keeps the stream aligned too, but its re-prefill recomputes the
+        next-token logits through the sequence path, which can differ
+        from the decode path at ULP level.)
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    max_tokens: int = 16
+    stop_tokens: tuple[int, ...] = field(default_factory=tuple)
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def _top_k_mask(logits, k):
+    """Mask logits outside each row's k highest.  k: (B,) i32, 0 = off."""
+    V = logits.shape[-1]
+    kk = jnp.clip(k, 1, V)
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    kth = jnp.take_along_axis(sorted_desc, (kk - 1)[:, None], axis=-1)
+    keep = (k <= 0)[:, None] | (logits >= kth)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def _top_p_mask(logits, p):
+    """Nucleus mask: keep the smallest prefix of the sorted distribution
+    whose cumulative probability reaches p.  p: (B,) f32, >= 1 = off."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    sp = -jnp.sort(-probs, axis=-1)
+    csum = jnp.cumsum(sp, axis=-1)
+    # first sorted index where the cumulative mass reaches p; every token
+    # with probability >= that threshold is kept (ties keep extra mass)
+    idx = jnp.argmax(csum >= p[:, None], axis=-1)
+    thr = jnp.take_along_axis(sp, idx[:, None], axis=-1)
+    keep = (p >= 1.0)[:, None] | (probs >= thr)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def sample(logits, temperature, top_k, top_p, keys):
+    """Draw one token per row under per-row parameters.
+
+    logits: (B, V) f32; temperature/top_p: (B,) f32; top_k: (B,) i32;
+    keys: (B, 2) uint32 — one PRNG key per row, so every request's stream
+    is deterministic regardless of batch composition.  Returns (B,) i32.
+    """
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    masked = _top_p_mask(_top_k_mask(scaled, top_k), top_p)
+    drawn = jax.vmap(lambda key, row: jax.random.categorical(key, row))(
+        keys, masked).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, drawn)
+
+
+def sample_one(logits, params: SamplingParams, key):
+    """Single-row convenience over :func:`sample` (prefill-time draw)."""
+    return sample(logits[None],
+                  jnp.asarray([params.temperature], jnp.float32),
+                  jnp.asarray([params.top_k], jnp.int32),
+                  jnp.asarray([params.top_p], jnp.float32),
+                  key[None])[0]

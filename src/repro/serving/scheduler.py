@@ -1,0 +1,160 @@
+"""Continuous-batching scheduler: FIFO admission, page budget, preemption.
+
+The scheduler owns the *policy* half of the serving engine: which waiting
+request is admitted into which slot, when a running request may grow by a
+page, and who gets evicted when the page pool runs dry.  The engine owns
+the *mechanism* (device arrays, jitted steps) and calls in here.
+
+Decisions (deliberately boring, and unit-tested as such):
+
+  * **admission** is strict FIFO — if the head of the queue doesn't fit
+    (no free slot, or not enough pages for its prompt plus one growth
+    page), nothing behind it is admitted either.  No head-of-line bypass:
+    starvation-freedom is worth more than packing efficiency here.
+  * **preemption** evicts the *most recently admitted* running request
+    (LIFO victim, the vLLM recency rule): it has the least sunk compute,
+    and the scheme is deadlock-free because the oldest request can always
+    run alone.  The victim's pages are freed and it is pushed back to the
+    *front* of the waiting queue with its generated tokens intact — on
+    re-admission its prompt is ``prompt + generated`` (recompute-style
+    preemption; no page swapping).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from enum import Enum
+
+from .kv_cache import PagePool
+from .sampling import SamplingParams
+
+
+class RequestState(Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One serving request plus its runtime bookkeeping."""
+    rid: int
+    prompt: list[int]
+    params: SamplingParams
+    state: RequestState = RequestState.WAITING
+    out: list[int] = field(default_factory=list)
+    slot: int | None = None
+    pages: list[int] = field(default_factory=list)
+    n_preemptions: int = 0
+    key: object = None          # per-request PRNG key (engine-owned)
+
+    @property
+    def full_sequence(self) -> list[int]:
+        """Prompt plus everything generated so far — what a re-admission
+        after preemption must prefill."""
+        return list(self.prompt) + list(self.out)
+
+    @property
+    def finished(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+
+class Scheduler:
+    """FIFO admission + LIFO preemption over a :class:`PagePool`."""
+
+    def __init__(self, pool: PagePool, max_slots: int):
+        self.pool = pool
+        self.max_slots = max_slots
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}          # slot -> request
+        self._ids = itertools.count()
+        self._admit_seq = itertools.count()            # recency for victims
+        self._admitted_at: dict[int, int] = {}         # rid -> seq
+
+    # ------------------------------------------------------------ intake
+
+    def add(self, prompt, params: SamplingParams | None = None,
+            rid: int | None = None) -> Request:
+        req = Request(rid=next(self._ids) if rid is None else rid,
+                      prompt=[int(t) for t in prompt],
+                      params=params or SamplingParams())
+        self.waiting.append(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.max_slots) if s not in self.running]
+
+    # --------------------------------------------------------- admission
+
+    def admit(self) -> list[Request]:
+        """Admit waiting requests FIFO while a slot and pages are
+        available.  Allocates each admission's prompt pages *plus one*
+        growth page worth of headroom (so a request never needs a page on
+        its very first decode step) and assigns a slot; the engine then
+        prefills the batch it gets back."""
+        admitted = []
+        slots = self.free_slots()
+        while self.waiting and slots:
+            req = self.waiting[0]
+            need = self.pool.pages_for(len(req.full_sequence) + 1)
+            pages = self.pool.alloc(need)
+            if pages is None:
+                break                                   # strict FIFO
+            self.waiting.popleft()
+            req.pages = pages
+            req.slot = slots.pop(0)
+            req.state = RequestState.RUNNING
+            self.running[req.slot] = req
+            self._admitted_at[req.rid] = next(self._admit_seq)
+            admitted.append(req)
+        return admitted
+
+    # ------------------------------------------------------ page growth
+
+    def grow(self, req: Request) -> bool:
+        """Grant ``req`` one more page, preempting younger requests until
+        it fits.  False only when ``req`` is alone and the pool is still
+        dry — the pool is simply too small for this sequence."""
+        while True:
+            pages = self.pool.alloc(1)
+            if pages is not None:
+                req.pages.extend(pages)
+                return True
+            victim = self._youngest_running(exclude=req)
+            if victim is None:
+                return False
+            self.preempt(victim)
+
+    def _youngest_running(self, exclude: Request) -> Request | None:
+        cands = [r for r in self.running.values() if r is not exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: self._admitted_at[r.rid])
+
+    def preempt(self, req: Request) -> None:
+        """Evict a running request: free its pages, requeue it at the
+        FRONT of the waiting queue with generated tokens intact."""
+        assert req.slot in self.running and self.running[req.slot] is req
+        del self.running[req.slot]
+        self.pool.free(req.pages)
+        req.pages = []
+        req.slot = None
+        req.state = RequestState.WAITING
+        req.n_preemptions += 1
+        self.waiting.appendleft(req)
+
+    # ------------------------------------------------------- completion
+
+    def finish(self, req: Request) -> None:
+        """Release a completed request's slot and pages (slot recycling)."""
+        assert req.slot in self.running and self.running[req.slot] is req
+        del self.running[req.slot]
+        self.pool.free(req.pages)
+        req.pages = []
+        req.slot = None
+        req.state = RequestState.FINISHED

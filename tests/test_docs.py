@@ -13,7 +13,7 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ["README.md", "docs/numerics.md", "docs/kernels.md",
-        "benchmarks/README.md"]
+        "docs/serving.md", "benchmarks/README.md"]
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 
 
