@@ -14,9 +14,8 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
+from repro import VMEM_BUDGET, get_policy, tcec_matmul, tuning, vmem_bytes
 from repro.core.matgen import relative_residual, urand
-from repro.core.policy import get_policy
-from repro.kernels import VMEM_BUDGET, tcec_matmul, tuning, vmem_bytes
 from .common import OUT_DIR, emit
 
 CAND = [128, 256, 512]

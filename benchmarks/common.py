@@ -5,7 +5,9 @@ import json
 import os
 import time
 
-OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+from repro.numerics import env_value
+
+OUT_DIR = env_value("REPRO_BENCH_OUT")
 
 
 def table(title: str, headers: list[str], rows: list[list]) -> str:

@@ -30,8 +30,7 @@ Interpret-mode numerics of the same kernel are validated in
 tests/test_kernels.py and tests/test_dispatch.py; fig1 shows accuracy."""
 import numpy as np
 
-from repro.core.policy import get_policy
-from repro.kernels import tuning
+from repro import get_policy, tuning
 from .common import emit
 
 PEAK_BF16 = 197e12     # per-chip MXU
@@ -160,7 +159,8 @@ def _smoke_check():
     own fallback — the CI gate for attention-dispatch regressions."""
     import numpy as np
     import jax.numpy as jnp
-    from repro.kernels import dispatch
+    import repro
+    from repro import numerics
     from repro.models import layers as L
 
     class Cfg:
@@ -173,13 +173,13 @@ def _smoke_check():
     v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)).astype(np.float32))
     pos = jnp.arange(256, dtype=jnp.int32)[None]
     ref = L.mha(q, k, v, Cfg, pos, pos, causal=True, window=0)
-    with dispatch.override(force=True, interpret=True, min_dim=0,
-                           attn_block=(128, 128)):
-        fused = L.sdpa(q, k, v, Cfg, pos, pos, causal=True, window=0)
+    fused = repro.attention(q, k, v, policy="tcec_bf16x6", q_pos=pos,
+                            k_pos=pos, causal=True, force=True,
+                            interpret=True, min_dim=0,
+                            attn_block=(128, 128))
     ok = bool(np.allclose(np.asarray(fused), np.asarray(ref),
                           rtol=2e-6, atol=2e-6))
-    with dispatch.override(enabled=False, force=True, interpret=True,
-                           min_dim=0):
+    with numerics.use(enabled=False, force=True, interpret=True, min_dim=0):
         # the escape hatch must restore the pure-XLA path bit for bit
         hatch = L.sdpa(q, k, v, Cfg, pos, pos, causal=True, window=0)
     ok &= bool(np.array_equal(np.asarray(hatch), np.asarray(ref)))

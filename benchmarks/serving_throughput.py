@@ -81,8 +81,7 @@ def run(smoke: bool = False) -> bool:
     ok &= mixed_parity
 
     # interpret-mode paged kernel vs the engine's gather fallback
-    from repro.kernels import dispatch
-    from repro.kernels.tcec_paged_attention import tcec_paged_attention
+    from repro import tcec_paged_attention
     rng = np.random.default_rng(2)
     kp = jnp.asarray(rng.standard_normal((9, 8, 2, 64)), jnp.bfloat16)
     vp = jnp.asarray(rng.standard_normal((9, 8, 2, 64)), jnp.bfloat16)

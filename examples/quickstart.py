@@ -6,14 +6,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import policy_mm, pdot
+import repro
 from repro.core.matgen import relative_residual, urand
-from repro.kernels import tcec_matmul
+from repro import tcec_matmul
 
 # --- 1. An FP32-accurate GEMM computed with 6 bf16 MXU passes ------------
 a, b = urand((512, 1024), seed=0), urand((1024, 256), seed=1)
 for pol in ["fp32", "bf16", "tcec_bf16x3", "tcec_bf16x6"]:
-    c = policy_mm(jnp.asarray(a), jnp.asarray(b), pol)
+    c = repro.matmul(jnp.asarray(a), jnp.asarray(b), policy=pol)
     print(f"{pol:13s} relative residual = "
           f"{relative_residual(np.asarray(c), a, b):.2e}")
 

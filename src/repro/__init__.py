@@ -1,2 +1,66 @@
 """repro: Ootomo-Yokota error-corrected Tensor-Core GEMM (TCEC) as a
-first-class precision policy in a multi-pod JAX training/serving framework."""
+first-class precision policy in a multi-pod JAX training/serving framework.
+
+The public surface — everything examples, benchmarks, and downstream
+callers need without touching ``repro.kernels.*`` or
+``repro.core.policy`` directly:
+
+* **Verbs** — :func:`repro.matmul`, :func:`repro.einsum`,
+  :func:`repro.attention`: policy-routed, differentiable, dispatched to
+  the fused Pallas kernels when eligible.
+* **Config** — :mod:`repro.numerics`: the one context-scoped recipe
+  (``with repro.numerics.use(policy="tcec_bf16x6", force=True): ...``)
+  unifying policy selection, kernel dispatch, and autotuning, with the
+  canonical ``REPRO_*`` env registry.
+* **Policies** — :class:`repro.Policy` (the frozen recipe dataclass),
+  :data:`repro.POLICIES`, :func:`repro.get_policy`.
+* **Explicit kernels** — :func:`repro.tcec_matmul`,
+  :func:`repro.tcec_attention`, :func:`repro.tcec_paged_attention` for
+  callers that want the fused kernel without the dispatch layer, plus the
+  :mod:`repro.tuning` autotuner namespace and its VMEM capacity model
+  (:data:`repro.VMEM_BUDGET`, :func:`repro.vmem_bytes`).
+"""
+from . import numerics
+from .numerics import (NumericsConfig, attention, einsum, matmul)
+
+__all__ = [
+    "numerics", "NumericsConfig", "matmul", "einsum", "attention",
+    "Policy", "POLICIES", "get_policy", "pdot", "policy_mm", "policy_bmm",
+    "tcec_matmul", "tcec_attention", "tcec_paged_attention", "tuning",
+    "VMEM_BUDGET", "vmem_bytes",
+]
+
+# Heavier subsystems load lazily (PEP 562): `import repro` must stay cheap
+# enough for pre-JAX-init users (launch.dryrun reads the env registry
+# before the backend locks its device count).
+_LAZY = {
+    "Policy": ("repro.core.policy", "PrecisionPolicy"),
+    "POLICIES": ("repro.core.policy", "POLICIES"),
+    "get_policy": ("repro.core.policy", "get_policy"),
+    "pdot": ("repro.core.policy", "pdot"),
+    "policy_mm": ("repro.core.policy", "policy_mm"),
+    "policy_bmm": ("repro.core.policy", "policy_bmm"),
+    "tcec_matmul": ("repro.kernels.ops", "tcec_matmul"),
+    "tcec_attention": ("repro.kernels.tcec_attention", "tcec_attention"),
+    "tcec_paged_attention": ("repro.kernels.tcec_paged_attention",
+                             "tcec_paged_attention"),
+    "tuning": ("repro.kernels.tuning", None),
+    "VMEM_BUDGET": ("repro.kernels.tcec_matmul", "VMEM_BUDGET"),
+    "vmem_bytes": ("repro.kernels.tcec_matmul", "vmem_bytes"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    mod = importlib.import_module(mod_name)
+    value = mod if attr is None else getattr(mod, attr)
+    globals()[name] = value          # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -89,8 +89,13 @@ POLICIES: dict[str, PrecisionPolicy] = {
 
 
 def get_policy(p) -> PrecisionPolicy:
+    """Resolve a policy name / instance / None (None = the active
+    :class:`repro.numerics.NumericsConfig`'s policy)."""
     if isinstance(p, PrecisionPolicy):
         return p
+    if p is None:
+        from repro import numerics
+        p = numerics.active().policy
     return POLICIES[p]
 
 
@@ -99,22 +104,23 @@ def get_policy(p) -> PrecisionPolicy:
 # same math into one VMEM-tiled kernel for the shapes it supports).
 # ---------------------------------------------------------------------------
 
-def _cpu_upcast_dots() -> bool:
+def _cpu_upcast_dots(cfg=None) -> bool:
     """XLA-CPU's thunk runtime lacks bf16 x bf16 -> f32 DotThunks for some
     shapes (execution-time UNIMPLEMENTED). On CPU we upcast the already-
     rounded operands to f32 — bit-identical results (bf16 -> f32 is exact,
     products/accumulation stay f32 = the MXU contract). The dry-run sets
-    REPRO_KEEP_BF16_DOTS=1 so compiled-artifact byte accounting keeps the
-    true bf16 operand traffic of the TPU target."""
-    import os
-    if os.environ.get("REPRO_KEEP_BF16_DOTS"):
+    ``keep_bf16_dots`` (env: REPRO_KEEP_BF16_DOTS) so compiled-artifact
+    byte accounting keeps the true bf16 operand traffic of the TPU
+    target."""
+    from repro import numerics
+    if (cfg or numerics.active()).keep_bf16_dots:
         return False
     return jax.default_backend() == "cpu"
 
 
-def _pass_dot(a, b, policy: PrecisionPolicy, dims):
+def _pass_dot(a, b, policy: PrecisionPolicy, dims, cfg=None):
     """One split-product GEMM: low-precision in, f32 out (MXU contract)."""
-    if policy.upcast_products or _cpu_upcast_dots():
+    if policy.upcast_products or _cpu_upcast_dots(cfg):
         a = a.astype(jnp.float32)
         b = b.astype(jnp.float32)
     return jax.lax.dot_general(a, b, dims,
@@ -122,13 +128,13 @@ def _pass_dot(a, b, policy: PrecisionPolicy, dims):
                                precision=jax.lax.Precision.DEFAULT)
 
 
-def _tcec_dot(a, b, policy: PrecisionPolicy, dims):
+def _tcec_dot(a, b, policy: PrecisionPolicy, dims, cfg=None):
     """Term-expanded GEMM with per-scale-group f32 accumulators + epilogue."""
     sa = split(a, policy.jdtype, policy.n_splits, policy.scale_bits)
     sb = split(b, policy.jdtype, policy.n_splits, policy.scale_bits)
     groups: dict[int, jax.Array] = {}
     for (i, j) in policy.keep:
-        t = _pass_dot(sa[i], sb[j], policy, dims)
+        t = _pass_dot(sa[i], sb[j], policy, dims, cfg)
         g = i + j
         groups[g] = t if g not in groups else groups[g] + t
     # epilogue: fold scale groups smallest-first (paper Code 3: += dc / 2048)
@@ -139,7 +145,7 @@ def _tcec_dot(a, b, policy: PrecisionPolicy, dims):
     return out
 
 
-def _plain_dot(a, b, policy: PrecisionPolicy, dims):
+def _plain_dot(a, b, policy: PrecisionPolicy, dims, cfg=None):
     if policy.name == "fp32":
         return jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
                                    dims, precision=jax.lax.Precision.HIGHEST,
@@ -147,7 +153,7 @@ def _plain_dot(a, b, policy: PrecisionPolicy, dims):
     lp = policy.jdtype
     a = a.astype(lp)
     b = b.astype(lp)
-    if _cpu_upcast_dots():  # values stay lp-rounded; products/accum f32
+    if _cpu_upcast_dots(cfg):  # values stay lp-rounded; products/accum f32
         a = a.astype(jnp.float32)
         b = b.astype(jnp.float32)
     return jax.lax.dot_general(a, b, dims,
@@ -155,22 +161,34 @@ def _plain_dot(a, b, policy: PrecisionPolicy, dims):
                                precision=jax.lax.Precision.DEFAULT)
 
 
-def _maybe_pallas(a, b, policy: PrecisionPolicy, dims):
+def _maybe_pallas(a, b, policy: PrecisionPolicy, dims, cfg):
     """Fused-kernel dispatch (kernels/dispatch.py), None -> XLA fallback.
 
     Imported lazily: repro.kernels imports this module at load time, so the
     dependency must point kernels -> core only at module scope."""
     from repro.kernels import dispatch
-    return dispatch.maybe_dispatch(a, b, policy, dims)
+    return dispatch.maybe_dispatch(a, b, policy, dims, cfg)
 
 
-def _dot_impl(a, b, policy: PrecisionPolicy, dims):
+def _dot_impl(a, b, policy: PrecisionPolicy, dims, cfg=None):
+    """One policy GEMM under one config.
+
+    ``cfg`` is the hashable :class:`repro.numerics.NumericsConfig` the
+    decision is made under — captured from the active context at *trace
+    time* when not threaded explicitly.  Because the active config's epoch
+    is part of the jit cache key (see ``repro.numerics.use``), a context
+    change deterministically re-runs this function under the new config
+    instead of reusing a stale lowering.
+    """
+    from repro import numerics
+    if cfg is None:
+        cfg = numerics.active()
     if policy.is_plain():
-        return _plain_dot(a, b, policy, dims)
-    out = _maybe_pallas(a, b, policy, dims)
+        return _plain_dot(a, b, policy, dims, cfg)
+    out = _maybe_pallas(a, b, policy, dims, cfg)
     if out is not None:
         return out
-    return _tcec_dot(a, b, policy, dims)
+    return _tcec_dot(a, b, policy, dims, cfg)
 
 
 # --- canonical core with policy-preserving backward ------------------------
@@ -215,13 +233,15 @@ def _make_dg(policy_name: str, nbatch: int, nm: int, nk: int, nn: int):
     return dg
 
 
-def policy_mm(a, b, policy="fp32"):
-    """(M, K) @ (K, N) -> (M, N) f32 under ``policy``."""
+def policy_mm(a, b, policy=None):
+    """(M, K) @ (K, N) -> (M, N) f32 under ``policy`` (None = the active
+    config's policy; env default ``fp32``)."""
     return _make_dg(get_policy(policy).name, 0, 1, 1, 1)(a, b)
 
 
-def policy_bmm(a, b, policy="fp32"):
-    """(B, M, K) @ (B, K, N) -> (B, M, N) f32 under ``policy``."""
+def policy_bmm(a, b, policy=None):
+    """(B, M, K) @ (B, K, N) -> (B, M, N) f32 under ``policy`` (None = the
+    active config's policy; env default ``fp32``)."""
     return _make_dg(get_policy(policy).name, 1, 1, 1, 1)(a, b)
 
 
@@ -241,12 +261,13 @@ def _parse(subscripts: str):
     return a_sub, b_sub, out, batch, contract, m_dims, n_dims
 
 
-def pdot(subscripts: str, a, b, policy="fp32"):
+def pdot(subscripts: str, a, b, policy=None):
     """Policy-routed binary einsum (the framework's single GEMM chokepoint).
 
     Supports any two-operand einsum with no repeated/diagonal indices — i.e.
     every contraction in the model zoo (qkv/out projections, MLPs, MoE expert
     GEMMs, attention QK^T / PV, MLA low-rank factors, SSD chunk matmuls).
+    ``policy=None`` resolves through the active numerics config.
     """
     policy = get_policy(policy)
     a_sub, b_sub, out, batch, contract, m_dims, n_dims = _parse(subscripts)

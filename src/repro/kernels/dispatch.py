@@ -10,6 +10,15 @@ fallback.  Both paths compute the identical corrected-GEMM math — the
 kernel just fuses it into one VMEM-tiled pass (the paper's CUTLASS
 integration), which is where the throughput headline comes from.
 
+Configuration comes from :mod:`repro.numerics`: every decision function
+takes the frozen :class:`~repro.numerics.NumericsConfig` as an explicit
+``cfg`` argument (defaulting to ``numerics.active()``, i.e. the innermost
+``repro.numerics.use(...)`` context or the env defaults).  The decision
+runs at trace time on static shapes, so under ``jit`` it costs nothing at
+runtime — and because the active config's epoch is part of the jit cache
+key, entering/exiting a ``use(...)`` context deterministically re-lowers
+instead of silently reusing a stale decision (the old footgun).
+
 Dispatch rules (see docs/kernels.md):
 
   1. the policy is a bf16 split policy (``tcec_bf16x3`` / ``tcec_bf16x6``):
@@ -23,86 +32,24 @@ Dispatch rules (see docs/kernels.md):
   4. the backend is TPU — or ``force`` is set, which runs the kernel in
      interpret mode (tests, CPU verification);
   5. the escape hatch is off: ``REPRO_DISABLE_PALLAS=1`` (or
-     ``override(enabled=False)``) restores the XLA path wholesale.
+     ``use(enabled=False)``) restores the XLA path wholesale.
 
-The decision runs at trace time on static shapes, so under ``jit`` it costs
-nothing at runtime.  NB: config changes do not retrigger tracing — toggle
-the escape hatch *before* the first traced call of a given shape, or clear
-jit caches.
+The pre-``repro.numerics`` entry points (``override`` / ``config`` /
+``reload_config`` / ``env_flag`` / ``DispatchConfig``) survive as thin
+deprecation shims at the bottom of this module.
 """
 from __future__ import annotations
-
-import contextlib
-import os
-from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
 
+from repro import numerics
 from repro.core.policy import PrecisionPolicy
 from . import ops, tuning
 
 
-def env_flag(name: str) -> bool:
-    """Truthy env parse: '', '0', 'false', 'no' (any case) all mean off."""
-    return os.environ.get(name, "").strip().lower() not in (
-        "", "0", "false", "no", "off")
-
-
-@dataclass(frozen=True)
-class DispatchConfig:
-    enabled: bool = True          # escape hatch: REPRO_DISABLE_PALLAS unsets
-    force: bool = False           # dispatch even off-TPU (interpret mode)
-    min_dim: int = 128            # smallest M/N/K worth padding to the MXU
-    block: tuple[int, int, int] | None = None   # override the autotuner
-    interpret: bool | None = None               # None = auto (non-TPU)
-    fuse_epilogue: bool = False   # models.layers fused_linear hook
-    flash_attention: bool = True  # fused attention kernel routing; the
-                                  # granular hatch REPRO_DISABLE_FLASH_ATTN
-                                  # unsets it (REPRO_DISABLE_PALLAS still
-                                  # covers attention wholesale via `enabled`)
-    attn_block: tuple[int, int] | None = None   # (bq, bk) autotuner override
-    paged_attention: bool = True  # paged decode-attention kernel routing;
-                                  # REPRO_DISABLE_PAGED_ATTN unsets it
-                                  # (REPRO_DISABLE_PALLAS still covers it)
-    paged_block: int | None = None              # pages-per-step override
-
-    @staticmethod
-    def from_env() -> "DispatchConfig":
-        return DispatchConfig(
-            enabled=not env_flag("REPRO_DISABLE_PALLAS"),
-            force=env_flag("REPRO_FORCE_PALLAS"),
-            min_dim=int(os.environ.get("REPRO_PALLAS_MIN_DIM", "128")),
-            fuse_epilogue=env_flag("REPRO_FUSE_EPILOGUE"),
-            flash_attention=not env_flag("REPRO_DISABLE_FLASH_ATTN"),
-            paged_attention=not env_flag("REPRO_DISABLE_PAGED_ATTN"),
-        )
-
-
-_CONFIG = DispatchConfig.from_env()
-
-
-def config() -> DispatchConfig:
-    return _CONFIG
-
-
-def reload_config() -> DispatchConfig:
-    """Re-read the env knobs (tests; long-lived processes toggling hatches)."""
-    global _CONFIG
-    _CONFIG = DispatchConfig.from_env()
-    return _CONFIG
-
-
-@contextlib.contextmanager
-def override(**kw):
-    """Scoped config override: ``with dispatch.override(force=True): ...``"""
-    global _CONFIG
-    prev = _CONFIG
-    _CONFIG = replace(prev, **kw)
-    try:
-        yield _CONFIG
-    finally:
-        _CONFIG = prev
+def _cfg(cfg) -> numerics.NumericsConfig:
+    return cfg if cfg is not None else numerics.active()
 
 
 # ----------------------------------------------------------- eligibility
@@ -142,13 +89,13 @@ def _canonicalize(a, b, dims):
     return a, b
 
 
-def maybe_dispatch(a, b, policy: PrecisionPolicy, dims):
-    """Return the fused-kernel result, or None to fall back to XLA.
+def decide(a, b, policy: PrecisionPolicy, dims, cfg=None):
+    """The GEMM dispatch decision, with the config threaded explicitly.
 
-    Called from ``repro.core.policy._dot_impl`` for every split-policy
-    contraction (forward and backward).
+    Returns the canonicalized ``(a, b)`` operands when the contraction
+    should lower to the fused kernel, or None for the XLA fallback.
     """
-    cfg = _CONFIG
+    cfg = _cfg(cfg)
     if not cfg.enabled or not eligible_policy(policy):
         return None
     if not (cfg.force or jax.default_backend() == "tpu"):
@@ -161,13 +108,31 @@ def maybe_dispatch(a, b, policy: PrecisionPolicy, dims):
     N = bt.shape[-1]
     if min(M, N, K) < cfg.min_dim:
         return None
-    return ops.tcec_matmul(at, bt, policy=policy.name, block=cfg.block,
-                           interpret=cfg.interpret)
+    return at, bt
+
+
+def maybe_dispatch(a, b, policy: PrecisionPolicy, dims, cfg=None):
+    """Return the fused-kernel result, or None to fall back to XLA.
+
+    Called from ``repro.core.policy._dot_impl`` for every split-policy
+    contraction (forward and backward).
+    """
+    cfg = _cfg(cfg)
+    canon = decide(a, b, policy, dims, cfg)
+    if canon is None:
+        return None
+    at, bt = canon
+    M, K = at.shape[-2], at.shape[-1]
+    N = bt.shape[-1]
+    B = at.shape[0] if at.ndim == 3 else 1
+    block = tuned_block(M, N, K, policy.name, batch=B, cfg=cfg)
+    return ops.tcec_matmul(at, bt, policy=policy.name, block=block,
+                           interpret=cfg.interpret, cfg=cfg)
 
 
 # ------------------------------------------------- attention dispatch
 
-def attention_eligible(q, k, v, *, policy) -> bool:
+def attention_eligible(q, k, v, *, policy, cfg=None) -> bool:
     """Trace-time eligibility of the fused attention kernel for these
     operands.  True iff: split bf16 policy; TPU backend or ``force``;
     model-layout 4-D shapes with ``H % Hkv == 0``; ``min(S, T) >=
@@ -178,7 +143,7 @@ def attention_eligible(q, k, v, *, policy) -> bool:
     and both escape hatches off."""
     from repro.core.policy import get_policy
     from repro.parallel import ctx
-    cfg = _CONFIG
+    cfg = _cfg(cfg)
     pol = get_policy(policy)
     if not cfg.enabled or not cfg.flash_attention or not eligible_policy(pol):
         return False
@@ -205,13 +170,13 @@ def attention_eligible(q, k, v, *, policy) -> bool:
 
 
 def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
-              window=0, softcap: float | None = None):
+              window=0, softcap: float | None = None, cfg=None):
     """Route a model attention call to the fused TCEC flash-attention
     kernel, or return None for the pdot-composition fallback.
 
     Called from ``models.layers.sdpa`` (and the MLA / cross-attention
     variants) with model-layout operands: q ``(B, S, H, hd)``, k/v
-    ``(B, T, Hkv, hd[v])``.  Eligibility mirrors :func:`maybe_dispatch`:
+    ``(B, T, Hkv, hd[v])``.  Eligibility mirrors :func:`decide`:
     split bf16 policy, TPU backend (or ``force`` -> interpret mode),
     ``min(S, T) >= min_dim``, and both escape hatches off
     (``REPRO_DISABLE_PALLAS`` disables all kernels,
@@ -224,10 +189,10 @@ def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
     recomputes the backward via the pdot composition.
     """
     from repro.core.policy import get_policy
+    cfg = _cfg(cfg)
     pol = get_policy(policy)
-    if not attention_eligible(q, k, v, policy=pol):
+    if not attention_eligible(q, k, v, policy=pol, cfg=cfg):
         return None
-    cfg = _CONFIG
     from .tcec_attention import tcec_attention
     B, S, H, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
@@ -235,7 +200,7 @@ def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
     if block is None:
         block = tuning.get_attention_block(B, Hkv, H // Hkv, S, T, hd,
                                            v.shape[3], pol.name,
-                                           causal=causal)
+                                           causal=causal, cfg=cfg)
     return tcec_attention(q, k, v, q_pos, k_pos, policy=pol.name,
                           causal=causal, window=window, softcap=softcap,
                           block=block, interpret=cfg.interpret)
@@ -250,7 +215,8 @@ def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
 # BlockSpecs and runs TCEC-split QK^T / P·V; the fallback (the caller's
 # gather + ``attention_decode`` math) is the verification oracle.
 
-def attention_decode_eligible(q, k_pages, v_pages, *, policy) -> bool:
+def attention_decode_eligible(q, k_pages, v_pages, *, policy,
+                              cfg=None) -> bool:
     """Trace-time eligibility of the paged decode-attention kernel.
 
     True iff: split bf16 policy; TPU backend or ``force``; no GSPMD mesh
@@ -263,7 +229,7 @@ def attention_decode_eligible(q, k_pages, v_pages, *, policy) -> bool:
     """
     from repro.core.policy import get_policy
     from repro.parallel import ctx
-    cfg = _CONFIG
+    cfg = _cfg(cfg)
     pol = get_policy(policy)
     if not cfg.enabled or not cfg.paged_attention or not eligible_policy(pol):
         return False
@@ -285,7 +251,7 @@ def attention_decode_eligible(q, k_pages, v_pages, *, policy) -> bool:
 
 
 def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
-                     window=0, softcap: float | None = None):
+                     window=0, softcap: float | None = None, cfg=None):
     """Route a paged decode-attention call to the fused kernel, or return
     None for the gather-and-attend fallback.
 
@@ -301,17 +267,19 @@ def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
     oracle).  ``REPRO_DISABLE_PAGED_ATTN=1`` restores exact dense parity.
     """
     from repro.core.policy import get_policy
+    cfg = _cfg(cfg)
     pol = get_policy(policy)
-    if not attention_decode_eligible(q, k_pages, v_pages, policy=pol):
+    if not attention_decode_eligible(q, k_pages, v_pages, policy=pol,
+                                     cfg=cfg):
         return None
-    cfg = _CONFIG
     from .tcec_paged_attention import tcec_paged_attention
     B, H, hd = q.shape
     NP, ps, Hkv, _ = k_pages.shape
     g = cfg.paged_block
     if g is None:
         g = tuning.get_paged_block(B, Hkv, H // Hkv, block_tables.shape[1],
-                                   ps, hd, v_pages.shape[3], pol.name)
+                                   ps, hd, v_pages.shape[3], pol.name,
+                                   cfg=cfg)
     return tcec_paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                 policy=pol.name, window=window,
                                 softcap=softcap, pages_per_step=g,
@@ -320,18 +288,60 @@ def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
 
 # ------------------------------------------------- epilogue-fusion hook
 
-def epilogue_eligible(policy: PrecisionPolicy) -> bool:
+def epilogue_eligible(policy: PrecisionPolicy, cfg=None) -> bool:
     """Whether ``models.layers.fused_linear`` may fold its bias/activation
-    into the kernel's scaled epilogue under the current config."""
-    cfg = _CONFIG
+    into the kernel's scaled epilogue under the given config."""
+    cfg = _cfg(cfg)
     return (cfg.enabled and cfg.fuse_epilogue and eligible_policy(policy)
             and (cfg.force or jax.default_backend() == "tpu"))
 
 
 def tuned_block(M: int, N: int, K: int, policy_name: str,
-                batch: int = 1) -> tuple[int, int, int]:
+                batch: int = 1, cfg=None) -> tuple[int, int, int]:
     """Config override if set, else the autotuner (measured or heuristic)."""
-    cfg = _CONFIG
+    cfg = _cfg(cfg)
     if cfg.block is not None:
         return cfg.block
-    return tuning.get_block(M, N, K, policy_name, batch=batch)
+    return tuning.get_block(M, N, K, policy_name, batch=batch, cfg=cfg)
+
+
+# ------------------------------------------------------ deprecation shims
+#
+# The pre-repro.numerics surface.  Each shim emits exactly one
+# DeprecationWarning and delegates; tests/test_deprecation.py runs them
+# under -W error::DeprecationWarning to pin the warning set.
+
+def override(**kw):
+    """Deprecated: use ``repro.numerics.use(...)``."""
+    numerics._deprecated("repro.kernels.dispatch.override()",
+                         "repro.numerics.use()")
+    return numerics.use(**kw)
+
+
+def config() -> numerics.NumericsConfig:
+    """Deprecated: use ``repro.numerics.active()``."""
+    numerics._deprecated("repro.kernels.dispatch.config()",
+                         "repro.numerics.active()")
+    return numerics.active()
+
+
+def reload_config() -> numerics.NumericsConfig:
+    """Deprecated: use ``repro.numerics.reload_env_defaults()``."""
+    numerics._deprecated("repro.kernels.dispatch.reload_config()",
+                         "repro.numerics.reload_env_defaults()")
+    return numerics.reload_env_defaults()
+
+
+def env_flag(name: str) -> bool:
+    """Deprecated: use ``repro.numerics.env_value(name)``."""
+    numerics._deprecated("repro.kernels.dispatch.env_flag()",
+                         "repro.numerics.env_value()")
+    return numerics._legacy_flag(name)
+
+
+def __getattr__(name):
+    if name == "DispatchConfig":
+        numerics._deprecated("repro.kernels.dispatch.DispatchConfig",
+                             "repro.numerics.NumericsConfig")
+        return numerics.NumericsConfig
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

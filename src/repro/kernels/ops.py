@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import numerics
 from .tcec_matmul import VMEM_BUDGET, tcec_matmul_pallas, vmem_bytes
 from . import tuning
 
@@ -22,7 +23,9 @@ def _on_tpu() -> bool:
 
 
 def pick_block(M: int, N: int, K: int, policy_name: str) -> tuple[int, int, int]:
-    """Static heuristic block choice (back-compat shim over tuning.py)."""
+    """Deprecated: use ``repro.tuning.heuristic_block``."""
+    numerics._deprecated("repro.kernels.ops.pick_block()",
+                         "repro.tuning.heuristic_block()")
     return tuning.heuristic_block(M, N, K, policy_name)
 
 
@@ -40,7 +43,7 @@ def tcec_matmul(a: jax.Array, b: jax.Array, policy: str = "tcec_bf16x6",
                 block: tuple[int, int, int] | None = None,
                 interpret: bool | None = None, bias: jax.Array | None = None,
                 activation: str | None = None,
-                out_scale: float = 1.0) -> jax.Array:
+                out_scale: float = 1.0, cfg=None) -> jax.Array:
     """FP32-accurate GEMM on the bf16 MXU via the fused TCEC kernel.
 
     ``(M, K) @ (K, N) -> (M, N)`` or batched ``(B, M, K) @ (B, K, N) ->
@@ -48,10 +51,16 @@ def tcec_matmul(a: jax.Array, b: jax.Array, policy: str = "tcec_bf16x6",
     optional fused epilogue computes ``act(out * out_scale + bias)`` inside
     the kernel (``bias`` shaped ``(N,)`` or ``(1, N)``).
 
-    When ``block`` is None the autotuner picks it: a measured winner from
-    the on-disk cache when available, the VMEM-filtered heuristic otherwise
-    (see ``kernels/tuning.py``).
+    ``block`` and ``interpret`` default from ``cfg`` (a
+    :class:`repro.numerics.NumericsConfig`; callers like
+    ``dispatch.maybe_dispatch`` thread theirs through, otherwise the
+    active context's): an explicit argument wins, then the config's
+    override, then the autotuner (measured winner from the on-disk cache
+    when available, VMEM-filtered heuristic otherwise — see
+    ``kernels/tuning.py``) and backend autodetection.
     """
+    if cfg is None:
+        cfg = numerics.active()
     batched = a.ndim == 3
     assert a.ndim == b.ndim, (a.shape, b.shape)
     if batched:
@@ -66,9 +75,13 @@ def tcec_matmul(a: jax.Array, b: jax.Array, policy: str = "tcec_bf16x6",
     # mismatched contraction dims into a wrong-but-finite result
     assert K == K2, (a.shape, b.shape)
     if interpret is None:
+        interpret = cfg.interpret
+    if interpret is None:
         interpret = not _on_tpu()
     if block is None:
-        block = tuning.get_block(M, N, K, policy, batch=B)
+        block = cfg.block
+    if block is None:
+        block = tuning.get_block(M, N, K, policy, batch=B, cfg=cfg)
     bm, bn, bk = block
     nd = a.ndim
     ap = _pad_dims(a.astype(jnp.float32), {nd - 2: bm, nd - 1: bk})

@@ -20,15 +20,17 @@ Cache format (see docs/kernels.md — "Autotuner cache"):
                    {"block": [128, 128, 256], "ms": 0.41,
                     "source": "measured"}}}
 
-Invalidation: delete the file, point ``REPRO_TUNE_CACHE`` elsewhere, or bump
+Invalidation: delete the file, point the cache elsewhere, or bump
 ``CACHE_VERSION`` (version-mismatched files are ignored wholesale).
 
-Environment knobs:
+Tuning knobs live on :class:`repro.numerics.NumericsConfig` (see the env
+registry in ``repro/numerics.py`` for the corresponding ``REPRO_TUNE*``
+variables):
 
-  * ``REPRO_TUNE_CACHE``   — cache file path (default
+  * ``tune_cache`` — cache file path (default
     ``~/.cache/repro/tcec_autotune.json``).
-  * ``REPRO_TUNE=1``       — force measurement even off-TPU (tests/bench).
-  * ``REPRO_TUNE_DISABLE=1`` — never measure; heuristic only.
+  * ``tune="force"`` — measure even off-TPU (tests/bench).
+  * ``tune="off"``   — never measure; heuristic only.
 """
 from __future__ import annotations
 
@@ -40,17 +42,16 @@ from collections import OrderedDict
 import jax
 import jax.numpy as jnp
 
+from repro import numerics
 from repro.core.policy import get_policy
 from .tcec_matmul import VMEM_BUDGET, tcec_matmul_pallas, vmem_bytes
 
 CACHE_VERSION = 1
 CANDIDATE_TILES = (128, 256, 512)
-_DEFAULT_CACHE_PATH = os.path.join(
-    os.path.expanduser("~"), ".cache", "repro", "tcec_autotune.json")
 
 
-def cache_path() -> str:
-    return os.environ.get("REPRO_TUNE_CACHE", _DEFAULT_CACHE_PATH)
+def cache_path(cfg=None) -> str:
+    return (cfg or numerics.active()).tune_cache
 
 
 def _round_up(x: int, m: int) -> int:
@@ -179,14 +180,18 @@ class BlockCache:
             self._flush()
 
 
-_default_cache: BlockCache | None = None
+_caches: dict[str, BlockCache] = {}
 
 
-def get_cache() -> BlockCache:
-    global _default_cache
-    if _default_cache is None or _default_cache.path != cache_path():
-        _default_cache = BlockCache()
-    return _default_cache
+def get_cache(cfg=None) -> BlockCache:
+    """One shared BlockCache per path: configs with different
+    ``tune_cache`` paths interleave without thrashing each other's
+    in-memory LRU."""
+    path = cache_path(cfg)
+    cache = _caches.get(path)
+    if cache is None:
+        cache = _caches[path] = BlockCache(path=path)
+    return cache
 
 
 def cache_key(B: int, M: int, N: int, K: int, policy_name: str,
@@ -197,11 +202,11 @@ def cache_key(B: int, M: int, N: int, K: int, policy_name: str,
 
 # ------------------------------------------------------------- measurement
 
-def _should_measure() -> bool:
-    from .dispatch import env_flag
-    if env_flag("REPRO_TUNE_DISABLE"):
+def _should_measure(cfg=None) -> bool:
+    mode = (cfg or numerics.active()).tune
+    if mode == "off":
         return False
-    if env_flag("REPRO_TUNE"):
+    if mode == "force":
         return True
     return jax.default_backend() == "tpu"
 
@@ -236,7 +241,6 @@ def _autotune_protocol(key: str, heuristic, candidates, measure,
     process still measures) -> candidate sweep -> persist the winner.
     ``heuristic``/``candidates`` are thunks; ``measure`` is ``block -> ms``
     or None (meaning: measurement unavailable here)."""
-    cache = cache or get_cache()
     hit = cache.get(key)
     if hit is not None:
         return tuple(hit["block"]), {**hit, "source": "cache"}
@@ -260,7 +264,8 @@ def _autotune_protocol(key: str, heuristic, candidates, measure,
 def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
              measure=None, cache: BlockCache | None = None, reps: int = 3,
              max_candidates: int | None = None,
-             interpret: bool | None = None) -> tuple[tuple[int, int, int], dict]:
+             interpret: bool | None = None,
+             cfg=None) -> tuple[tuple[int, int, int], dict]:
     """Pick a block for ``(B, M, N, K)`` under ``policy_name``.
 
     Returns ``(block, meta)`` where ``meta["source"]`` is one of
@@ -269,22 +274,26 @@ def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
     persisted, so a later TPU process still gets to measure).
 
     ``measure`` is injectable: a callable ``block -> milliseconds``.  When
-    ``None``, real wall-clock measurement runs iff on TPU or ``REPRO_TUNE=1``.
+    ``None``, real wall-clock measurement runs iff on TPU or the numerics
+    config says ``tune="force"`` (env: ``REPRO_TUNE=1``).  ``cfg`` is the
+    :class:`repro.numerics.NumericsConfig` governing tune mode and cache
+    path (default: the active context).
     """
-    if measure is None and _should_measure():
+    if measure is None and _should_measure(cfg):
         measure = lambda blk: _measure_block(B, M, N, K, policy_name, blk,
                                              reps=reps, interpret=interpret)
     return _autotune_protocol(
         cache_key(B, M, N, K, policy_name, jax.default_backend()),
         heuristic=lambda: heuristic_block(M, N, K, policy_name),
         candidates=lambda: candidate_blocks(M, N, K, policy_name),
-        measure=measure, cache=cache, max_candidates=max_candidates)
+        measure=measure, cache=cache or get_cache(cfg),
+        max_candidates=max_candidates)
 
 
 def get_block(M: int, N: int, K: int, policy_name: str,
-              batch: int = 1) -> tuple[int, int, int]:
+              batch: int = 1, cfg=None) -> tuple[int, int, int]:
     """The dispatch-facing entry: tuned block if available, else heuristic."""
-    block, _ = autotune(batch, M, N, K, policy_name)
+    block, _ = autotune(batch, M, N, K, policy_name, cfg=cfg)
     return block
 
 
@@ -365,12 +374,12 @@ def autotune_attention(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
                        hdv: int, policy_name: str, *, causal: bool = True,
                        measure=None, cache: BlockCache | None = None,
                        reps: int = 3, max_candidates: int | None = None,
-                       interpret: bool | None = None
+                       interpret: bool | None = None, cfg=None
                        ) -> tuple[tuple[int, int], dict]:
     """Attention-kernel analogue of :func:`autotune`: same cache file and
     protocol (``_autotune_protocol``), attention-specific key/candidates/
     measurement."""
-    if measure is None and _should_measure():
+    if measure is None and _should_measure(cfg):
         measure = lambda blk: _measure_attention(
             B, Hkv, rep, S, T, hd, hdv, policy_name, blk, reps=reps,
             interpret=interpret, causal=causal)
@@ -381,15 +390,16 @@ def autotune_attention(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
                                                policy_name),
         candidates=lambda: attn_candidate_blocks(S, T, rep, hd, hdv,
                                                  policy_name),
-        measure=measure, cache=cache, max_candidates=max_candidates)
+        measure=measure, cache=cache or get_cache(cfg),
+        max_candidates=max_candidates)
 
 
 def get_attention_block(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
                         hdv: int, policy_name: str,
-                        causal: bool = True) -> tuple[int, int]:
+                        causal: bool = True, cfg=None) -> tuple[int, int]:
     """Dispatch-facing entry for the attention kernel's (bq, bk)."""
     block, _ = autotune_attention(B, Hkv, rep, S, T, hd, hdv, policy_name,
-                                  causal=causal)
+                                  causal=causal, cfg=cfg)
     return block
 
 
@@ -464,11 +474,12 @@ def autotune_paged(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
                    hdv: int, policy_name: str, *, measure=None,
                    cache: BlockCache | None = None, reps: int = 3,
                    max_candidates: int | None = None,
-                   interpret: bool | None = None) -> tuple[int, dict]:
+                   interpret: bool | None = None,
+                   cfg=None) -> tuple[int, dict]:
     """Paged-kernel analogue of :func:`autotune`: same cache file and
     protocol, pages-per-step candidate space.  Entries store the winner as
     a one-element ``block`` list so the JSON schema stays uniform."""
-    if measure is None and _should_measure():
+    if measure is None and _should_measure(cfg):
         measure = lambda g: _measure_paged(B, Hkv, rep, maxp, ps, hd, hdv,
                                            policy_name, g, reps=reps,
                                            interpret=interpret)
@@ -480,12 +491,14 @@ def autotune_paged(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
                                                  policy_name),),
         candidates=lambda: [(g,) for g in paged_candidate_blocks(
             maxp, ps, rep, hd, hdv, policy_name)],
-        measure=wrapped, cache=cache, max_candidates=max_candidates)
+        measure=wrapped, cache=cache or get_cache(cfg),
+        max_candidates=max_candidates)
     return block[0], meta
 
 
 def get_paged_block(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
-                    hdv: int, policy_name: str) -> int:
+                    hdv: int, policy_name: str, cfg=None) -> int:
     """Dispatch-facing entry for the paged kernel's pages-per-step."""
-    g, _ = autotune_paged(B, Hkv, rep, maxp, ps, hd, hdv, policy_name)
+    g, _ = autotune_paged(B, Hkv, rep, maxp, ps, hd, hdv, policy_name,
+                          cfg=cfg)
     return g

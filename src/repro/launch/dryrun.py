@@ -1,13 +1,13 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any jax import: jax locks the device
-# count on first init. REPRO_DRYRUN_DEVICES lets tests use a small world.
-_n = os.environ.get("REPRO_DRYRUN_DEVICES")
+# The XLA_FLAGS write above MUST run before jax initializes a backend: jax
+# locks the device count on first init.  REPRO_DRYRUN_DEVICES (typed read
+# through the env registry — repro.numerics imports no jax at module
+# scope) lets tests use a small world.
+from repro.numerics import env_value as _env_value
+_n = _env_value("REPRO_DRYRUN_DEVICES")
 if _n:
     os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
-# keep native bf16 dots in the lowered HLO: the analyzer must see the TPU
-# target's true operand bytes (see repro.core.policy._cpu_upcast_dots)
-os.environ["REPRO_KEEP_BF16_DOTS"] = "1"
 
 """Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell,
 record memory / FLOPs / collective-traffic evidence for EXPERIMENTS.md.
@@ -117,6 +117,18 @@ def model_flops(cfg, shape) -> float:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              mesh_override=None, overrides: dict | None = None) -> dict:
+    # keep native bf16 dots in the lowered HLO: the analyzer must see the
+    # TPU target's true operand bytes (see repro.core.policy's
+    # _cpu_upcast_dots); scoped via the numerics context instead of a
+    # process-wide env write
+    from repro import numerics
+    with numerics.use(keep_bf16_dots=True):
+        return _run_cell(arch, shape_name, multi_pod, mesh_override,
+                         overrides)
+
+
+def _run_cell(arch: str, shape_name: str, multi_pod: bool,
+              mesh_override=None, overrides: dict | None = None) -> dict:
     import jax
     from repro.configs import LONG_CONTEXT_ARCHS, SHAPES, get_config
     from repro.launch.mesh import make_production_mesh

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models import get_model
 
@@ -112,8 +113,14 @@ def main():
     ap.add_argument("--max-slots", type=int, default=0,
                     help="decode batch width (0 = --batch): smaller forces "
                          "queueing, exercising continuous batching")
+    numerics.add_cli_overrides(ap)
     args = ap.parse_args()
 
+    with numerics.cli_context(args):
+        _main(args)
+
+
+def _main(args):
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     if args.policy:
         cfg = cfg.replace(policy=args.policy)

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import numerics
 from repro.configs import SHAPES
 from repro.models import get_model
 from repro.optim import adamw
@@ -77,8 +78,20 @@ def _ns(mesh, spec_tree):
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def lower_cell(cfg, shape_name: str, mesh, opt_cfg=None):
-    """Lower one (arch x shape x mesh) cell; returns (lowered, kind)."""
+def lower_cell(cfg, shape_name: str, mesh, opt_cfg=None,
+               numerics_overrides: dict | None = None):
+    """Lower one (arch x shape x mesh) cell; returns (lowered, kind).
+
+    ``numerics_overrides`` scopes the lowering under
+    ``repro.numerics.use(**overrides)`` — the dispatch decisions baked
+    into the lowered artifact are exactly that config's (the dry-run uses
+    this to sweep fused-vs-fallback cost models deterministically).
+    """
+    with numerics.use(**(numerics_overrides or {})):
+        return _lower_cell(cfg, shape_name, mesh, opt_cfg)
+
+
+def _lower_cell(cfg, shape_name, mesh, opt_cfg):
     shape = SHAPES[shape_name]
     opt_cfg = opt_cfg or adamw.OptConfig(
         moment_dtype=("bfloat16" if cfg.shard_mode == "fsdp_tp"

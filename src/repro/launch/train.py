@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 
+from repro import numerics
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.data.pipeline import DataConfig
 from repro.optim import adamw
@@ -30,8 +31,14 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    numerics.add_cli_overrides(ap)
     args = ap.parse_args()
 
+    with numerics.cli_context(args):
+        _main(args)
+
+
+def _main(args):
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     if args.policy:
         cfg = cfg.replace(policy=args.policy)

@@ -387,8 +387,8 @@ def _act(x, kind: str):
 
 # ------------------------------------------------- fused linear epilogue
 #
-# When the dispatch config enables epilogue fusion (REPRO_FUSE_EPILOGUE or
-# dispatch.override(fuse_epilogue=True)), act(x @ W + b) runs as ONE fused
+# When the numerics config enables epilogue fusion (REPRO_FUSE_EPILOGUE or
+# repro.numerics.use(fuse_epilogue=True)), act(x @ W + b) runs as ONE fused
 # Pallas kernel call: the bias add and activation fold into the kernel's
 # scaled epilogue on the last K step, so the pre-activation never round-trips
 # HBM. The backward stays policy-preserving: it recomputes the pre-activation
@@ -421,19 +421,20 @@ def fused_linear(x, w, b, activation, policy):
 
     x: (B, S, D); w: (D, F); b: (F,) or None; activation: None|"gelu"|"silu".
     """
+    from repro import numerics
     from repro.kernels import dispatch, ops
     from repro.core.policy import get_policy
     pol = get_policy(policy)
     B, S, D = x.shape
     F = w.shape[-1]
-    cfg = dispatch.config()
-    if (dispatch.epilogue_eligible(pol)
+    cfg = numerics.active()
+    if (dispatch.epilogue_eligible(pol, cfg)
             and min(B * S, D, F) >= cfg.min_dim):
         x2 = x.reshape(B * S, D)
-        block = dispatch.tuned_block(B * S, F, D, pol.name)
+        block = dispatch.tuned_block(B * S, F, D, pol.name, cfg=cfg)
         out = ops.tcec_matmul(x2, w, policy=pol.name, block=block,
                               interpret=cfg.interpret, bias=b,
-                              activation=activation)
+                              activation=activation, cfg=cfg)
         return out.reshape(B, S, F)
     return _linear_unfused(x, w, b, activation, policy)
 
@@ -462,8 +463,8 @@ fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)
 
 
 def mlp(p, x, cfg):
-    from repro.kernels import dispatch
-    if dispatch.config().fuse_epilogue:
+    from repro import numerics
+    if numerics.active().fuse_epilogue:
         g = fused_linear(x, p["w_gate"], None, cfg.activation, cfg.policy)
         u = fused_linear(x, p["w_up"], None, None, cfg.policy)
         return pdot("bsf,fd->bsd", g * u, p["w_down"], cfg.policy)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics
 from repro.models import get_model
 from . import sampling
 from .kv_cache import (DEFAULT_PAGE_SIZE, PagePool, inverse_permutation,
@@ -59,7 +60,13 @@ class Engine:
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  num_pages: int | None = None,
                  page_size: int = DEFAULT_PAGE_SIZE,
-                 max_pages_per_slot: int | None = None):
+                 max_pages_per_slot: int | None = None,
+                 numerics_config: numerics.NumericsConfig | None = None):
+        # the engine's kernel-dispatch recipe is pinned at construction:
+        # every jitted step runs under this scope, so an ambient
+        # numerics.use(...) entered mid-serve can't flip an in-flight
+        # trace's dispatch decisions out from under the KV cache
+        self.numerics_config = numerics_config or numerics.active()
         model = get_model(cfg)
         if model.decode_step_paged is None:
             raise ValueError(
@@ -234,10 +241,12 @@ class Engine:
 
     def step(self):
         """One engine iteration: admit + prefill, then one decode step for
-        whatever is in flight."""
-        self._admit_and_prefill()
-        self._ensure_pages()
-        self._decode_step()
+        whatever is in flight — under the construction-time numerics
+        scope."""
+        with numerics.use(self.numerics_config):
+            self._admit_and_prefill()
+            self._ensure_pages()
+            self._decode_step()
 
     def run(self, prompts=None, params=None) -> dict[int, list[int]]:
         """Convenience driver: optionally enqueue ``prompts`` (with one

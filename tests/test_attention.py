@@ -22,8 +22,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import numerics
 from repro.core.policy import get_policy
 from repro.kernels import dispatch, tuning
+from repro.numerics import NumericsConfig
 from repro.kernels.tcec_attention import (NEG_INF as KERNEL_NEG_INF,
                                           attn_vmem_bytes, tcec_attention)
 from repro.kernels.tcec_matmul import VMEM_BUDGET
@@ -157,38 +159,36 @@ def test_attention_dispatch_eligibility():
     k = jnp.ones((1, 128, 2, 64))
     v = jnp.ones((1, 128, 2, 64))
     kw = dict(force=True, interpret=True, min_dim=0, attn_block=(128, 128))
-    with dispatch.override(**kw):
+    with numerics.use(**kw):
         assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is not None
         assert dispatch.attention(q, k, v, policy="fp32") is None
         assert dispatch.attention(q, k, v, policy="bf16") is None
         assert dispatch.attention(q, k, v, policy="fp16_halfhalf") is None
-    with dispatch.override(**{**kw, "min_dim": 256}):
+    with numerics.use(**{**kw, "min_dim": 256}):
         assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
     # off-TPU without force: decline (the XLA fallback is the default path)
     assert jax.default_backend() != "tpu"
     assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
 
 
-def test_escape_hatches_cover_attention(monkeypatch):
+def test_escape_hatches_cover_attention():
     q = jnp.ones((1, 128, 4, 64))
     k = jnp.ones((1, 128, 2, 64))
     v = jnp.ones((1, 128, 2, 64))
     # REPRO_DISABLE_PALLAS covers attention wholesale...
-    with dispatch.override(force=True, interpret=True, min_dim=0,
-                           enabled=False):
+    with numerics.use(force=True, interpret=True, min_dim=0,
+                      enabled=False):
         assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
     # ...and the granular hatch covers only attention
-    with dispatch.override(force=True, interpret=True, min_dim=0,
-                           flash_attention=False):
+    with numerics.use(force=True, interpret=True, min_dim=0,
+                      flash_attention=False):
         assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
-    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
-    assert not dispatch.DispatchConfig.from_env().enabled
-    monkeypatch.delenv("REPRO_DISABLE_PALLAS")
-    monkeypatch.setenv("REPRO_DISABLE_FLASH_ATTN", "1")
-    cfg = dispatch.DispatchConfig.from_env()
+    # the env spellings parse through the registry into the same fields
+    assert not NumericsConfig.from_env({"REPRO_DISABLE_PALLAS": "1"}).enabled
+    cfg = NumericsConfig.from_env({"REPRO_DISABLE_FLASH_ATTN": "1"})
     assert cfg.enabled and not cfg.flash_attention
-    monkeypatch.setenv("REPRO_DISABLE_FLASH_ATTN", "0")
-    assert dispatch.DispatchConfig.from_env().flash_attention
+    assert NumericsConfig.from_env(
+        {"REPRO_DISABLE_FLASH_ATTN": "0"}).flash_attention
 
 
 def test_attention_layer_routes_through_kernel():
@@ -208,9 +208,9 @@ def test_attention_layer_routes_through_kernel():
     p = L.attn_init(jax.random.PRNGKey(0), Cfg)
     x = _rand((2, 128, 64), 11)
     pos = jnp.broadcast_to(jnp.arange(128, dtype=jnp.int32)[None], (2, 128))
-    with dispatch.override(enabled=False):
+    with numerics.use(enabled=False):
         y_xla = L.attention(p, x, Cfg, pos, causal=True, window=0)
-    with dispatch.override(force=True, interpret=True, min_dim=0,
+    with numerics.use(force=True, interpret=True, min_dim=0,
                            attn_block=(128, 128)):
         y_fused = L.attention(p, x, Cfg, pos, causal=True, window=0)
     np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_xla),
@@ -229,10 +229,10 @@ def test_fused_attention_is_differentiable_and_matches_fallback_grads():
         return jnp.sum(L.sdpa(q, k, v, cfg, qp, kp, causal=True,
                               window=0) ** 2)
 
-    with dispatch.override(force=True, interpret=True, min_dim=0,
+    with numerics.use(force=True, interpret=True, min_dim=0,
                            attn_block=(128, 128)):
         gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
-    with dispatch.override(enabled=False):
+    with numerics.use(enabled=False):
         rq, rk, rv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
     for g, r in [(gq, rq), (gk, rk), (gv, rv)]:
         np.testing.assert_allclose(np.asarray(g), np.asarray(r),
@@ -250,10 +250,10 @@ def test_fused_attention_grad_with_traced_window():
         return jax.grad(lambda q: jnp.sum(L.sdpa(
             q, k, v, cfg, qp, kp, causal=True, window=w) ** 2))(q)
 
-    with dispatch.override(force=True, interpret=True, min_dim=0,
+    with numerics.use(force=True, interpret=True, min_dim=0,
                            attn_block=(128, 128)):
         gq = g(q, jnp.int32(40))
-    with dispatch.override(enabled=False):
+    with numerics.use(enabled=False):
         rq = jax.grad(lambda q: jnp.sum(L.sdpa(
             q, k, v, cfg, qp, kp, causal=True, window=40) ** 2))(q)
     np.testing.assert_allclose(np.asarray(gq), np.asarray(rq),
@@ -333,7 +333,7 @@ def test_dispatch_declines_when_min_block_exceeds_vmem():
     q = jnp.ones((1, 128, 128, 128))   # H=128, Hkv=1 -> rep=128
     k = jnp.ones((1, 128, 1, 128))
     v = jnp.ones((1, 128, 1, 128))
-    with dispatch.override(force=True, interpret=True, min_dim=0):
+    with numerics.use(force=True, interpret=True, min_dim=0):
         assert not dispatch.attention_eligible(q, k, v, policy="tcec_bf16x6")
         assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
 
@@ -347,7 +347,7 @@ def test_dispatch_declines_under_mesh():
     k = jnp.ones((1, 128, 2, 64))
     v = jnp.ones((1, 128, 2, 64))
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
-    with dispatch.override(force=True, interpret=True, min_dim=0,
+    with numerics.use(force=True, interpret=True, min_dim=0,
                            attn_block=(128, 128)):
         assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is not None
         with ctx.use_mesh(mesh):

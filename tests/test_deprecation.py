@@ -1,0 +1,105 @@
+"""The pre-`repro.numerics` entry points survive as deprecation shims.
+
+Each old entry point must (a) emit exactly one DeprecationWarning naming
+its replacement and (b) still work by delegating to the new surface.  CI
+runs this file under ``-W error::DeprecationWarning``: the ``pytest.warns``
+blocks absorb the expected warnings, so any *unexpected* deprecation —
+from the shims or from internal code accidentally still calling them —
+fails the build.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import numerics
+from repro.kernels import dispatch, ops, tuning
+
+
+def _one_deprecation(match):
+    return pytest.warns(DeprecationWarning, match=match)
+
+
+def test_override_warns_and_delegates():
+    with _one_deprecation("repro.numerics.use"):
+        cm = dispatch.override(min_dim=5, force=True)
+    with cm as cfg:
+        assert isinstance(cfg, numerics.NumericsConfig)
+        assert numerics.active().min_dim == 5 and numerics.active().force
+    assert numerics.active().min_dim == numerics.NumericsConfig.from_env().min_dim
+
+
+def test_config_warns_and_returns_active():
+    with numerics.use(min_dim=17):
+        with _one_deprecation("repro.numerics.active"):
+            cfg = dispatch.config()
+        assert cfg.min_dim == 17
+
+
+def test_reload_config_warns_and_delegates(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_MIN_DIM", "64")
+    try:
+        with _one_deprecation("reload_env_defaults"):
+            assert dispatch.reload_config().min_dim == 64
+    finally:
+        monkeypatch.delenv("REPRO_PALLAS_MIN_DIM")
+        numerics.reload_env_defaults()
+
+
+def test_env_flag_warns_and_parses(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    with _one_deprecation("repro.numerics.env_value"):
+        assert dispatch.env_flag("REPRO_FORCE_PALLAS") is True
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "0")
+    with _one_deprecation("repro.numerics.env_value"):
+        assert dispatch.env_flag("REPRO_FORCE_PALLAS") is False
+
+
+def test_dispatch_config_class_warns_and_aliases():
+    with _one_deprecation("NumericsConfig"):
+        cls = dispatch.DispatchConfig
+    assert cls is numerics.NumericsConfig
+    with _one_deprecation("NumericsConfig"):
+        cfg = dispatch.DispatchConfig.from_env({"REPRO_DISABLE_PALLAS": "1"})
+    assert not cfg.enabled
+
+
+def test_pick_block_warns_and_delegates():
+    with _one_deprecation("heuristic_block"):
+        blk = ops.pick_block(512, 512, 512, "tcec_bf16x6")
+    assert blk == tuning.heuristic_block(512, 512, 512, "tcec_bf16x6")
+
+
+def test_old_surface_still_routes_dispatch():
+    """End to end through the shims: override() still flips the dispatch
+    path, exactly like the new context (delegation, not a fork)."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32))
+    from repro.core.policy import policy_mm
+    with _one_deprecation("repro.numerics.use"):
+        cm = dispatch.override(force=True, interpret=True, min_dim=0,
+                               block=(128, 128, 128))
+    with cm:
+        y_old = policy_mm(a, b, "tcec_bf16x6")
+    with numerics.use(force=True, interpret=True, min_dim=0,
+                      block=(128, 128, 128)):
+        y_new = policy_mm(a, b, "tcec_bf16x6")
+    assert np.array_equal(np.asarray(y_old), np.asarray(y_new))
+
+
+def test_internal_call_sites_are_warning_free():
+    """The migrated internals must never touch a shim: a full dispatch
+    round-trip (forced kernel + fallback) under ``error`` filters must not
+    raise."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32))
+    from repro.core.policy import policy_mm
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        with numerics.use(force=True, interpret=True, min_dim=0):
+            policy_mm(a, b, "tcec_bf16x6")
+        with numerics.use(enabled=False):
+            policy_mm(a, b, "tcec_bf16x6")

@@ -15,9 +15,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import numerics
 from repro.core.policy import POLICIES, get_policy, pdot, policy_bmm, policy_mm
 from repro.kernels import (dispatch, tcec_bmm_ref, tcec_matmul,
                            tcec_matmul_ref, tuning)
+from repro.numerics import NumericsConfig
 
 
 def _rand(shape, seed):
@@ -49,24 +51,22 @@ def test_dispatch_off_by_default_on_cpu():
     assert dispatch.maybe_dispatch(a, b, pol, dims) is None
 
 
-def test_env_flags_treat_zero_as_off(monkeypatch):
+def test_env_flags_treat_zero_as_off():
     for off in ("0", "false", "no", "off", ""):
-        monkeypatch.setenv("REPRO_FORCE_PALLAS", off)
-        monkeypatch.setenv("REPRO_DISABLE_PALLAS", off)
-        cfg = dispatch.DispatchConfig.from_env()
+        env = {"REPRO_FORCE_PALLAS": off, "REPRO_DISABLE_PALLAS": off}
+        cfg = NumericsConfig.from_env(env)
         assert not cfg.force and cfg.enabled, off
-    monkeypatch.setenv("REPRO_TUNE", "0")
-    monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
-    assert not tuning._should_measure()
+    assert NumericsConfig.from_env({"REPRO_TUNE": "0"}).tune == "auto"
+    with numerics.use(tune="auto"):
+        assert tuning._should_measure() == (jax.default_backend() == "tpu")
 
 
-def test_escape_hatch_env_var(monkeypatch):
-    monkeypatch.setenv("REPRO_DISABLE_PALLAS", "1")
-    cfg = dispatch.DispatchConfig.from_env()
+def test_escape_hatch_env_var():
+    cfg = NumericsConfig.from_env({"REPRO_DISABLE_PALLAS": "1"})
     assert not cfg.enabled
     # even under force, the hatch wins
-    with dispatch.override(enabled=False, force=True, min_dim=0,
-                           interpret=True):
+    with numerics.use(enabled=False, force=True, min_dim=0,
+                      interpret=True):
         a, b = _rand((128, 128), 0), _rand((128, 128), 1)
         out = dispatch.maybe_dispatch(a, b, get_policy("tcec_bf16x6"),
                                       (((1,), (0,)), ((), ())))
@@ -75,22 +75,36 @@ def test_escape_hatch_env_var(monkeypatch):
 
 def test_min_dim_gate_and_shape_rules():
     pol = get_policy("tcec_bf16x6")
-    with dispatch.override(force=True, interpret=True, min_dim=128):
+    with numerics.use(force=True, interpret=True, min_dim=128):
         small = dispatch.maybe_dispatch(
             _rand((8, 32), 0), _rand((32, 16), 1), pol,
             (((1,), (0,)), ((), ())))
         assert small is None          # below min_dim -> XLA
-    with dispatch.override(force=True, interpret=True, min_dim=0):
+    with numerics.use(force=True, interpret=True, min_dim=0):
         multi_m = dispatch.maybe_dispatch(
             _rand((4, 8, 128), 0), _rand((128, 128), 1), pol,
             (((2,), (0,)), ((), ())))
         assert multi_m is None        # a.ndim != nb+2 -> XLA
 
 
+def test_explicit_cfg_argument_wins_over_ambient():
+    """decide()/maybe_dispatch() take the config as an explicit static
+    argument — the ambient context only supplies the default."""
+    pol = get_policy("tcec_bf16x6")
+    a, b = _rand((128, 128), 0), _rand((128, 128), 1)
+    dims = (((1,), (0,)), ((), ()))
+    on = numerics.active().replace(force=True, interpret=True, min_dim=0)
+    off = on.replace(enabled=False)
+    with numerics.use(enabled=False):
+        assert dispatch.decide(a, b, pol, dims, cfg=on) is not None
+    with numerics.use(force=True, interpret=True, min_dim=0):
+        assert dispatch.decide(a, b, pol, dims, cfg=off) is None
+
+
 # ------------------------------------------------------ bit-equivalence
 
 def _xla(fn, *args):
-    with dispatch.override(enabled=False):
+    with numerics.use(enabled=False):
         return fn(*args)
 
 
@@ -99,7 +113,7 @@ def test_policy_mm_bit_identical_to_xla_path():
     K block covers the contraction (same RN-f32 operation sequence)."""
     a, b = _rand((256, 256), 2), _rand((256, 256), 3)
     for pol in ("tcec_bf16x3", "tcec_bf16x6"):
-        with dispatch.override(force=True, interpret=True, min_dim=0,
+        with numerics.use(force=True, interpret=True, min_dim=0,
                                block=(256, 256, 256)):
             y_pal = policy_mm(a, b, pol)
         y_xla = _xla(policy_mm, a, b, pol)
@@ -108,7 +122,7 @@ def test_policy_mm_bit_identical_to_xla_path():
 
 def test_policy_bmm_bit_identical_to_xla_path():
     a, b = _rand((2, 128, 128), 4), _rand((2, 128, 128), 5)
-    with dispatch.override(force=True, interpret=True, min_dim=0,
+    with numerics.use(force=True, interpret=True, min_dim=0,
                            block=(128, 128, 128)):
         y_pal = policy_bmm(a, b, "tcec_bf16x6")
     y_xla = _xla(policy_bmm, a, b, "tcec_bf16x6")
@@ -119,7 +133,7 @@ def test_pdot_routes_through_kernel_and_matches():
     """pdot's canonical transpose makes attention/MLP-shaped einsums
     eligible; K-blocked dispatch stays allclose to the XLA path."""
     a, b = _rand((256, 384), 6), _rand((384, 128), 7)
-    with dispatch.override(force=True, interpret=True, min_dim=0):
+    with numerics.use(force=True, interpret=True, min_dim=0):
         y_pal = pdot("mk,kn->mn", a, b, "tcec_bf16x6")
     y_xla = _xla(pdot, "mk,kn->mn", a, b, "tcec_bf16x6")
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_xla),
@@ -135,10 +149,10 @@ def test_backward_is_policy_preserving_and_bit_identical():
     def loss(w):
         return jnp.sum(policy_mm(a, w, "tcec_bf16x6") ** 2)
 
-    with dispatch.override(force=True, interpret=True, min_dim=0,
+    with numerics.use(force=True, interpret=True, min_dim=0,
                            block=(256, 256, 256)):
         g_pal = jax.grad(loss)(w)
-    with dispatch.override(enabled=False):
+    with numerics.use(enabled=False):
         g_xla = jax.grad(loss)(w)
     assert np.array_equal(_bits(g_pal), _bits(g_xla))
 
@@ -195,7 +209,7 @@ def test_fused_linear_layer_hook(activation):
 
     def run(fuse):
         kw = dict(fuse_epilogue=fuse, force=True, interpret=True, min_dim=0)
-        with dispatch.override(**kw):
+        with numerics.use(**kw):
             y, vjp = jax.vjp(
                 lambda x, w: fused_linear(x, w, None, activation,
                                           "tcec_bf16x6"),
@@ -214,7 +228,7 @@ def test_fused_linear_layer_hook(activation):
         z = pdot("bsd,df->bsf", x, w, "tcec_bf16x6")
         return jnp.sum(EPILOGUE_ACTIVATIONS[activation](z))
 
-    with dispatch.override(fuse_epilogue=False, force=True, interpret=True,
+    with numerics.use(fuse_epilogue=False, force=True, interpret=True,
                            min_dim=0):
         dx_ref, dw_ref = jax.grad(ref_loss, argnums=(0, 1))(x, w)
     np.testing.assert_allclose(np.asarray(dx_f), np.asarray(dx_ref),
@@ -294,12 +308,12 @@ def test_autotune_reuse_across_processes(tmp_path):
     assert f"SOURCE cache {blk}" in r.stdout, (r.stdout, r.stderr)
 
 
-def test_heuristic_fallback_not_persisted(tmp_path, monkeypatch):
-    monkeypatch.setenv("REPRO_TUNE_DISABLE", "1")
+def test_heuristic_fallback_not_persisted(tmp_path):
     path = str(tmp_path / "tune.json")
     cache = tuning.BlockCache(path=path)
-    blk, meta = tuning.autotune(1, 1024, 1024, 1024, "tcec_bf16x6",
-                                cache=cache)
+    with numerics.use(tune="off"):
+        blk, meta = tuning.autotune(1, 1024, 1024, 1024, "tcec_bf16x6",
+                                    cache=cache)
     assert meta["source"] == "heuristic"
     assert blk == tuning.heuristic_block(1024, 1024, 1024, "tcec_bf16x6")
     assert not (tmp_path / "tune.json").exists()   # heuristics never persist

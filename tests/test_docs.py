@@ -12,8 +12,9 @@ import sys
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOCS = ["README.md", "docs/numerics.md", "docs/kernels.md",
+DOCS = ["README.md", "docs/api.md", "docs/numerics.md", "docs/kernels.md",
         "docs/serving.md", "benchmarks/README.md"]
+EXAMPLES = ["examples/numerics_tour.py"]
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 
 
@@ -54,11 +55,27 @@ def test_readme_policy_table_matches_code():
         assert f"`{name}`" in readme, f"policy {name} missing from README"
 
 
-def test_readme_env_knobs_match_code():
-    with open(os.path.join(ROOT, "README.md")) as f:
-        readme = f.read()
-    import inspect
-    from repro.kernels import dispatch, tuning
-    src = inspect.getsource(dispatch) + inspect.getsource(tuning)
-    for var in re.findall(r"REPRO_[A-Z_]+", readme):
-        assert var in src, f"README documents unknown env knob {var}"
+@pytest.mark.parametrize("rel", EXAMPLES)
+def test_registered_example_runs(rel):
+    """Examples registered in the docs suite must execute end to end."""
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, rel)], capture_output=True,
+        text=True, cwd=ROOT, timeout=600,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")})
+    assert r.returncode == 0, f"{rel} failed:\n{r.stderr[-2000:]}"
+
+
+def test_doc_env_knobs_match_registry():
+    """Every REPRO_* name the docs mention must be a registered env var,
+    and the two knob-table homes (README + docs/api.md) must document the
+    full registry."""
+    from repro.numerics import ENV_VARS
+    mentioned = {}
+    for rel in DOCS:
+        with open(os.path.join(ROOT, rel)) as f:
+            mentioned[rel] = set(re.findall(r"REPRO_[A-Z0-9_]+", f.read()))
+        unknown = mentioned[rel] - set(ENV_VARS)
+        assert not unknown, f"{rel} documents unknown env knob(s) {unknown}"
+    for rel in ("README.md", "docs/api.md"):
+        missing = set(ENV_VARS) - mentioned[rel]
+        assert not missing, f"{rel} knob table is missing {missing}"

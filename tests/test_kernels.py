@@ -11,7 +11,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.matgen import exp_rand, relative_residual, urand
 from repro.kernels import (tcec_matmul, tcec_matmul_ref, matmul_f64,
-                           pick_block, vmem_bytes, VMEM_BUDGET)
+                           vmem_bytes, VMEM_BUDGET)
 from repro.core.policy import get_policy
 
 
@@ -72,8 +72,9 @@ def test_kernel_wide_exponent_inputs():
 
 
 def test_block_picker_respects_vmem_budget():
+    from repro.kernels import tuning
     for pol in ("tcec_bf16x3", "tcec_bf16x6"):
-        blk = pick_block(4096, 4096, 4096, pol)
+        blk = tuning.heuristic_block(4096, 4096, 4096, pol)
         assert vmem_bytes(blk, get_policy(pol)) <= VMEM_BUDGET
         assert all(s % 128 == 0 for s in blk)
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import numerics
 from repro.configs import get_smoke_config
 from repro.kernels import dispatch, tuning
 from repro.kernels.tcec_matmul import VMEM_BUDGET
@@ -306,16 +307,16 @@ def test_paged_kernel_ignores_stale_garbage_in_recycled_pages():
 def test_paged_dispatch_eligibility_and_hatches(monkeypatch):
     q, kp, vp, bt, lengths = _paged_case(seed=14)
     pol = "tcec_bf16x6"
-    with dispatch.override(force=True, interpret=True, paged_block=2):
+    with numerics.use(force=True, interpret=True, paged_block=2):
         assert dispatch.attention_decode_eligible(q, kp, vp, policy=pol)
         out = dispatch.attention_decode(q, kp, vp, bt, lengths, policy=pol)
         assert out is not None and out.shape == (3, 8, 64)
         # granular hatch
-        with dispatch.override(paged_attention=False):
+        with numerics.use(paged_attention=False):
             assert dispatch.attention_decode(q, kp, vp, bt, lengths,
                                              policy=pol) is None
         # wholesale hatch
-        with dispatch.override(enabled=False):
+        with numerics.use(enabled=False):
             assert dispatch.attention_decode(q, kp, vp, bt, lengths,
                                              policy=pol) is None
         # plain policies stay on XLA
@@ -323,13 +324,13 @@ def test_paged_dispatch_eligibility_and_hatches(monkeypatch):
                                                       policy="bf16")
     # off-TPU without force: decline
     assert not dispatch.attention_decode_eligible(q, kp, vp, policy=pol)
-    # env hatch round-trip
+    # env hatch round-trip through the process defaults
     monkeypatch.setenv("REPRO_DISABLE_PAGED_ATTN", "1")
-    assert not dispatch.reload_config().paged_attention
+    assert not numerics.reload_env_defaults().paged_attention
     monkeypatch.setenv("REPRO_DISABLE_PAGED_ATTN", "0")
-    assert dispatch.reload_config().paged_attention
+    assert numerics.reload_env_defaults().paged_attention
     monkeypatch.delenv("REPRO_DISABLE_PAGED_ATTN")
-    dispatch.reload_config()
+    numerics.reload_env_defaults()
 
 
 def test_paged_dispatch_declines_under_mesh():
@@ -337,7 +338,7 @@ def test_paged_dispatch_declines_under_mesh():
     from repro.parallel import ctx
     q, kp, vp, bt, lengths = _paged_case(seed=15)
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
-    with dispatch.override(force=True, interpret=True):
+    with numerics.use(force=True, interpret=True):
         with ctx.use_mesh(mesh):
             assert not dispatch.attention_decode_eligible(
                 q, kp, vp, policy="tcec_bf16x6")
@@ -360,7 +361,7 @@ def test_paged_kernel_matches_fused_dispatch_inside_model_layer():
     bt = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
     lengths = jnp.asarray([6, 11], jnp.int32)
     ref, _ = L.attention_decode_paged(lp, x, cfg, pool, bt, lengths)
-    with dispatch.override(force=True, interpret=True, min_dim=0,
+    with numerics.use(force=True, interpret=True, min_dim=0,
                            paged_block=2):
         out, _ = L.attention_decode_paged(lp, x, cfg, pool, bt, lengths)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
