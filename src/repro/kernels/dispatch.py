@@ -32,7 +32,14 @@ Dispatch rules (see docs/kernels.md):
   4. the backend is TPU — or ``force`` is set, which runs the kernel in
      interpret mode (tests, CPU verification);
   5. the escape hatch is off: ``REPRO_DISABLE_PALLAS=1`` (or
-     ``use(enabled=False)``) restores the XLA path wholesale.
+     ``use(enabled=False)``) restores the XLA path wholesale;
+  6. under an installed GSPMD mesh (``repro.parallel.ctx``), the
+     ``shard_map`` knob is on (``use(shard_map=True)``, the default /
+     ``REPRO_SHARD_MAP``) and ``kernels/shmap.py`` supports a per-shard
+     spec for the shapes — the call then runs as per-device kernel shards
+     under ``shard_map`` (K-sharded contractions fold locally, then one
+     f32 ``psum``).  Unsupported specs (or the knob off) decline to the
+     XLA fallback, which GSPMD shards natively.
 
 The pre-``repro.numerics`` entry points (``override`` / ``config`` /
 ``reload_config`` / ``env_flag`` / ``DispatchConfig``) survive as thin
@@ -89,6 +96,28 @@ def _canonicalize(a, b, dims):
     return a, b
 
 
+def _mesh_plan_or_decline(shapes_plan, cfg):
+    """Rule 6: returns ``(mesh, plan)`` — ``(None, None)`` when no mesh is
+    installed, or the string ``"decline"`` when a mesh is installed but
+    the knob is off / the spec is unsupported (the caller falls back to
+    XLA, which GSPMD shards natively)."""
+    from repro.parallel import ctx
+    mesh = ctx.current_mesh()
+    if mesh is None:
+        return None, None
+    if not cfg.shard_map:
+        return mesh, "decline"
+    if "model" in ctx.dp_axes():
+        # dp_over_model: the context declares "model" a *batch* axis
+        # (small-model pure DP — parallel/sharding.py replicates params).
+        # The plan builders would assign it to N/K/M instead, forcing an
+        # all-gather on entry to every shard_map; pure DP is exactly what
+        # the XLA fallback shards natively, so decline.
+        return mesh, "decline"
+    plan = shapes_plan(mesh)
+    return mesh, (plan if plan is not None else "decline")
+
+
 def decide(a, b, policy: PrecisionPolicy, dims, cfg=None):
     """The GEMM dispatch decision, with the config threaded explicitly.
 
@@ -108,6 +137,11 @@ def decide(a, b, policy: PrecisionPolicy, dims, cfg=None):
     N = bt.shape[-1]
     if min(M, N, K) < cfg.min_dim:
         return None
+    from . import shmap
+    _, plan = _mesh_plan_or_decline(
+        lambda mesh: shmap.matmul_plan(at.shape, bt.shape, mesh), cfg)
+    if plan == "decline":
+        return None
     return at, bt
 
 
@@ -115,13 +149,22 @@ def maybe_dispatch(a, b, policy: PrecisionPolicy, dims, cfg=None):
     """Return the fused-kernel result, or None to fall back to XLA.
 
     Called from ``repro.core.policy._dot_impl`` for every split-policy
-    contraction (forward and backward).
+    contraction (forward and backward).  Under an installed mesh the call
+    runs per shard through the ``shard_map`` wrapper (rule 6).
     """
     cfg = _cfg(cfg)
     canon = decide(a, b, policy, dims, cfg)
     if canon is None:
         return None
     at, bt = canon
+    from . import shmap
+    mesh, plan = _mesh_plan_or_decline(
+        lambda m: shmap.matmul_plan(at.shape, bt.shape, m), cfg)
+    if mesh is not None:
+        if plan == "decline":         # decide() screens this; stay graceful
+            return None
+        return shmap.sharded_matmul(at, bt, policy=policy.name, mesh=mesh,
+                                    cfg=cfg, plan=plan)
     M, K = at.shape[-2], at.shape[-1]
     N = bt.shape[-1]
     B = at.shape[0] if at.ndim == 3 else 1
@@ -136,18 +179,16 @@ def attention_eligible(q, k, v, *, policy, cfg=None) -> bool:
     """Trace-time eligibility of the fused attention kernel for these
     operands.  True iff: split bf16 policy; TPU backend or ``force``;
     model-layout 4-D shapes with ``H % Hkv == 0``; ``min(S, T) >=
-    min_dim``; no GSPMD mesh installed (the pdot fallbacks carry the
-    context-parallel sharding constraints — q-sequence on the model axis —
-    while a bare ``pallas_call`` would replicate attention per device;
-    sharded fused attention needs a ``shard_map`` wrapper, future work);
-    and both escape hatches off."""
+    min_dim``; both escape hatches off; and — under an installed GSPMD
+    mesh — the ``shard_map`` knob is on and ``kernels/shmap.py`` has a
+    per-shard spec for these shapes (head- or q-sequence-sharded), in
+    which case the kernel runs per device under ``shard_map``.  An
+    unsupported spec declines to the pdot fallbacks, which carry the
+    context-parallel sharding constraints."""
     from repro.core.policy import get_policy
-    from repro.parallel import ctx
     cfg = _cfg(cfg)
     pol = get_policy(policy)
     if not cfg.enabled or not cfg.flash_attention or not eligible_policy(pol):
-        return False
-    if ctx.current_mesh() is not None:
         return False
     if not (cfg.force or jax.default_backend() == "tpu"):
         return False
@@ -159,6 +200,11 @@ def attention_eligible(q, k, v, *, policy, cfg=None) -> bool:
             or Hkv == 0 or H % Hkv):
         return False
     if min(S, T) < cfg.min_dim:
+        return False
+    from . import shmap
+    _, plan = _mesh_plan_or_decline(
+        lambda mesh: shmap.attention_plan(q.shape, k.shape, mesh), cfg)
+    if plan == "decline":
         return False
     # even the minimum (128, 128) block must fit VMEM — extreme-rep GQA
     # (rep ~ 100+ query heads per KV head) declines to the XLA path
@@ -193,6 +239,16 @@ def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
     pol = get_policy(policy)
     if not attention_eligible(q, k, v, policy=pol, cfg=cfg):
         return None
+    from . import shmap
+    mesh, plan = _mesh_plan_or_decline(
+        lambda m: shmap.attention_plan(q.shape, k.shape, m), cfg)
+    if mesh is not None:
+        if plan == "decline":         # eligibility screens this; graceful
+            return None
+        return shmap.sharded_attention(q, k, v, q_pos, k_pos,
+                                       policy=pol.name, causal=causal,
+                                       window=window, softcap=softcap,
+                                       mesh=mesh, cfg=cfg, plan=plan)
     from .tcec_attention import tcec_attention
     B, S, H, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
@@ -219,21 +275,20 @@ def attention_decode_eligible(q, k_pages, v_pages, *, policy,
                               cfg=None) -> bool:
     """Trace-time eligibility of the paged decode-attention kernel.
 
-    True iff: split bf16 policy; TPU backend or ``force``; no GSPMD mesh
-    (same constraint as :func:`attention_eligible`); decode-layout shapes —
-    q ``(B, H, hd)``, pools ``(NP, ps, Hkv, hd[v])`` with ``H % Hkv == 0``;
-    a single page fits VMEM; and the hatches are off
+    True iff: split bf16 policy; TPU backend or ``force``; decode-layout
+    shapes — q ``(B, H, hd)``, pools ``(NP, ps, Hkv, hd[v])`` with
+    ``H % Hkv == 0``; a single page fits VMEM; the hatches are off
     (``REPRO_DISABLE_PALLAS`` wholesale, ``REPRO_DISABLE_PAGED_ATTN``
-    granular).  No ``min_dim`` gate: decode rows are ``rep``-tall by
-    construction — the page gather, not the tile size, is the point.
+    granular); and — under an installed GSPMD mesh — the ``shard_map``
+    knob is on and ``kernels/shmap.py`` supports the layout (KV heads on
+    ``model``, batch on the data axes; block tables stay device-local).
+    No ``min_dim`` gate: decode rows are ``rep``-tall by construction —
+    the page gather, not the tile size, is the point.
     """
     from repro.core.policy import get_policy
-    from repro.parallel import ctx
     cfg = _cfg(cfg)
     pol = get_policy(policy)
     if not cfg.enabled or not cfg.paged_attention or not eligible_policy(pol):
-        return False
-    if ctx.current_mesh() is not None:
         return False
     if not (cfg.force or jax.default_backend() == "tpu"):
         return False
@@ -243,6 +298,11 @@ def attention_decode_eligible(q, k_pages, v_pages, *, policy,
     NP, ps, Hkv, hd2 = k_pages.shape
     if (hd2 != hd or v_pages.shape[:3] != k_pages.shape[:3]
             or Hkv == 0 or H % Hkv):
+        return False
+    from . import shmap
+    _, plan = _mesh_plan_or_decline(
+        lambda mesh: shmap.paged_plan(q.shape, k_pages.shape, mesh), cfg)
+    if plan == "decline":
         return False
     from .tcec_paged_attention import paged_vmem_bytes
     from .tcec_matmul import VMEM_BUDGET
@@ -272,6 +332,15 @@ def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
     if not attention_decode_eligible(q, k_pages, v_pages, policy=pol,
                                      cfg=cfg):
         return None
+    from . import shmap
+    mesh, plan = _mesh_plan_or_decline(
+        lambda m: shmap.paged_plan(q.shape, k_pages.shape, m), cfg)
+    if mesh is not None:
+        if plan == "decline":         # eligibility screens this; graceful
+            return None
+        return shmap.sharded_paged_attention(
+            q, k_pages, v_pages, block_tables, lengths, policy=pol.name,
+            window=window, softcap=softcap, mesh=mesh, cfg=cfg, plan=plan)
     from .tcec_paged_attention import tcec_paged_attention
     B, H, hd = q.shape
     NP, ps, Hkv, _ = k_pages.shape
@@ -290,9 +359,16 @@ def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
 
 def epilogue_eligible(policy: PrecisionPolicy, cfg=None) -> bool:
     """Whether ``models.layers.fused_linear`` may fold its bias/activation
-    into the kernel's scaled epilogue under the given config."""
+    into the kernel's scaled epilogue under the given config.
+
+    Declines under an installed GSPMD mesh: the fused path flattens
+    ``(B, S, D) -> (B*S, D)``, and that reshape replicates a sharded
+    batch dim under GSPMD — the unfused pdot path dispatches through the
+    ``shard_map`` wrapper instead (same GEMMs, unfused epilogue)."""
+    from repro.parallel import ctx
     cfg = _cfg(cfg)
     return (cfg.enabled and cfg.fuse_epilogue and eligible_policy(policy)
+            and ctx.current_mesh() is None
             and (cfg.force or jax.default_backend() == "tpu"))
 
 

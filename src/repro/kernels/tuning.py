@@ -194,10 +194,18 @@ def get_cache(cfg=None) -> BlockCache:
     return cache
 
 
+def _ns(backend: str, namespace: str | None) -> str:
+    """Key prefix: ``backend`` or ``backend/shmap`` (per-shard tuning —
+    under a mesh the kernel runs the *local* tile, so winners live in
+    their own namespace and never collide with same-shaped global
+    problems)."""
+    return backend if namespace is None else f"{backend}/{namespace}"
+
+
 def cache_key(B: int, M: int, N: int, K: int, policy_name: str,
-              backend: str) -> str:
+              backend: str, namespace: str | None = None) -> str:
     b, m, n, k = shape_bucket(B, M, N, K)
-    return f"{backend}/{policy_name}/b{b}_m{m}_n{n}_k{k}"
+    return f"{_ns(backend, namespace)}/{policy_name}/b{b}_m{m}_n{n}_k{k}"
 
 
 # ------------------------------------------------------------- measurement
@@ -265,7 +273,8 @@ def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
              measure=None, cache: BlockCache | None = None, reps: int = 3,
              max_candidates: int | None = None,
              interpret: bool | None = None,
-             cfg=None) -> tuple[tuple[int, int, int], dict]:
+             cfg=None, namespace: str | None = None
+             ) -> tuple[tuple[int, int, int], dict]:
     """Pick a block for ``(B, M, N, K)`` under ``policy_name``.
 
     Returns ``(block, meta)`` where ``meta["source"]`` is one of
@@ -283,7 +292,7 @@ def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
         measure = lambda blk: _measure_block(B, M, N, K, policy_name, blk,
                                              reps=reps, interpret=interpret)
     return _autotune_protocol(
-        cache_key(B, M, N, K, policy_name, jax.default_backend()),
+        cache_key(B, M, N, K, policy_name, jax.default_backend(), namespace),
         heuristic=lambda: heuristic_block(M, N, K, policy_name),
         candidates=lambda: candidate_blocks(M, N, K, policy_name),
         measure=measure, cache=cache or get_cache(cfg),
@@ -291,9 +300,14 @@ def autotune(B: int, M: int, N: int, K: int, policy_name: str, *,
 
 
 def get_block(M: int, N: int, K: int, policy_name: str,
-              batch: int = 1, cfg=None) -> tuple[int, int, int]:
-    """The dispatch-facing entry: tuned block if available, else heuristic."""
-    block, _ = autotune(batch, M, N, K, policy_name, cfg=cfg)
+              batch: int = 1, cfg=None,
+              namespace: str | None = None) -> tuple[int, int, int]:
+    """The dispatch-facing entry: tuned block if available, else heuristic.
+
+    ``namespace="shmap"`` keys the lookup on the per-shard shape under a
+    mesh (``kernels/shmap.py`` passes the local tile dims here)."""
+    block, _ = autotune(batch, M, N, K, policy_name, cfg=cfg,
+                        namespace=namespace)
     return block
 
 
@@ -338,13 +352,13 @@ def attn_candidate_blocks(S: int, T: int, rep: int, hd: int, hdv: int,
 
 def attn_cache_key(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
                    hdv: int, policy_name: str, backend: str,
-                   causal: bool = True) -> str:
+                   causal: bool = True, namespace: str | None = None) -> str:
     s, t = _round_up(S, 128), _round_up(T, 128)
     d, dv = _round_up(hd, 128), _round_up(hdv, 128)
     # causal is part of the key: the kernel's block-level causal skip
     # halves the work, so causal and non-causal sweeps favor different
     # blocks for the same shape
-    return (f"{backend}/attn/{policy_name}/"
+    return (f"{_ns(backend, namespace)}/attn/{policy_name}/"
             f"b{max(1, B)}_h{max(1, Hkv)}_r{rep}_s{s}_t{t}_d{d}_v{dv}"
             f"_c{int(causal)}")
 
@@ -374,7 +388,8 @@ def autotune_attention(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
                        hdv: int, policy_name: str, *, causal: bool = True,
                        measure=None, cache: BlockCache | None = None,
                        reps: int = 3, max_candidates: int | None = None,
-                       interpret: bool | None = None, cfg=None
+                       interpret: bool | None = None, cfg=None,
+                       namespace: str | None = None
                        ) -> tuple[tuple[int, int], dict]:
     """Attention-kernel analogue of :func:`autotune`: same cache file and
     protocol (``_autotune_protocol``), attention-specific key/candidates/
@@ -385,7 +400,7 @@ def autotune_attention(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
             interpret=interpret, causal=causal)
     return _autotune_protocol(
         attn_cache_key(B, Hkv, rep, S, T, hd, hdv, policy_name,
-                       jax.default_backend(), causal),
+                       jax.default_backend(), causal, namespace),
         heuristic=lambda: attn_heuristic_block(S, T, rep, hd, hdv,
                                                policy_name),
         candidates=lambda: attn_candidate_blocks(S, T, rep, hd, hdv,
@@ -396,10 +411,13 @@ def autotune_attention(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
 
 def get_attention_block(B: int, Hkv: int, rep: int, S: int, T: int, hd: int,
                         hdv: int, policy_name: str,
-                        causal: bool = True, cfg=None) -> tuple[int, int]:
-    """Dispatch-facing entry for the attention kernel's (bq, bk)."""
+                        causal: bool = True, cfg=None,
+                        namespace: str | None = None) -> tuple[int, int]:
+    """Dispatch-facing entry for the attention kernel's (bq, bk).
+    ``namespace="shmap"`` keys on the per-shard shape (local tile)."""
     block, _ = autotune_attention(B, Hkv, rep, S, T, hd, hdv, policy_name,
-                                  causal=causal, cfg=cfg)
+                                  causal=causal, cfg=cfg,
+                                  namespace=namespace)
     return block
 
 
@@ -438,9 +456,10 @@ def paged_heuristic_block(maxp: int, ps: int, rep: int, hd: int, hdv: int,
 
 
 def paged_cache_key(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
-                    hdv: int, policy_name: str, backend: str) -> str:
+                    hdv: int, policy_name: str, backend: str,
+                    namespace: str | None = None) -> str:
     d, dv = _round_up(hd, 128), _round_up(hdv, 128)
-    return (f"{backend}/paged/{policy_name}/"
+    return (f"{_ns(backend, namespace)}/paged/{policy_name}/"
             f"b{max(1, B)}_h{max(1, Hkv)}_r{rep}_p{max(1, maxp)}_ps{ps}"
             f"_d{d}_v{dv}")
 
@@ -475,7 +494,8 @@ def autotune_paged(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
                    cache: BlockCache | None = None, reps: int = 3,
                    max_candidates: int | None = None,
                    interpret: bool | None = None,
-                   cfg=None) -> tuple[int, dict]:
+                   cfg=None, namespace: str | None = None
+                   ) -> tuple[int, dict]:
     """Paged-kernel analogue of :func:`autotune`: same cache file and
     protocol, pages-per-step candidate space.  Entries store the winner as
     a one-element ``block`` list so the JSON schema stays uniform."""
@@ -486,7 +506,7 @@ def autotune_paged(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
     wrapped = None if measure is None else (lambda blk: measure(blk[0]))
     block, meta = _autotune_protocol(
         paged_cache_key(B, Hkv, rep, maxp, ps, hd, hdv, policy_name,
-                        jax.default_backend()),
+                        jax.default_backend(), namespace),
         heuristic=lambda: (paged_heuristic_block(maxp, ps, rep, hd, hdv,
                                                  policy_name),),
         candidates=lambda: [(g,) for g in paged_candidate_blocks(
@@ -497,8 +517,10 @@ def autotune_paged(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
 
 
 def get_paged_block(B: int, Hkv: int, rep: int, maxp: int, ps: int, hd: int,
-                    hdv: int, policy_name: str, cfg=None) -> int:
-    """Dispatch-facing entry for the paged kernel's pages-per-step."""
+                    hdv: int, policy_name: str, cfg=None,
+                    namespace: str | None = None) -> int:
+    """Dispatch-facing entry for the paged kernel's pages-per-step.
+    ``namespace="shmap"`` keys on the per-shard shape (local tile)."""
     g, _ = autotune_paged(B, Hkv, rep, maxp, ps, hd, hdv, policy_name,
-                          cfg=cfg)
+                          cfg=cfg, namespace=namespace)
     return g

@@ -113,10 +113,24 @@ def main():
     ap.add_argument("--max-slots", type=int, default=0,
                     help="decode batch width (0 = --batch): smaller forces "
                          "queueing, exercising continuous batching")
+    ap.add_argument("--mesh-model", type=int, default=0, metavar="N",
+                    help="install a (devices/N, N) (data, model) host mesh: "
+                         "the engine shards its page pools (KV heads on "
+                         "the model axis) and the paged decode kernel runs "
+                         "per shard via shard_map (0 = no mesh; see "
+                         "docs/parallel.md)")
     numerics.add_cli_overrides(ap)
     args = ap.parse_args()
 
-    with numerics.cli_context(args):
+    import contextlib
+    mesh_scope = contextlib.nullcontext()
+    if args.mesh_model:
+        from repro.launch.mesh import make_host_mesh
+        from repro.parallel import ctx
+        mesh = make_host_mesh(model=args.mesh_model)
+        print(f"mesh: {dict(mesh.shape)}", flush=True)
+        mesh_scope = ctx.use_mesh(mesh)
+    with numerics.cli_context(args), mesh_scope:
         _main(args)
 
 

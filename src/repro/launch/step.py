@@ -71,6 +71,35 @@ def make_serve_step(cfg):
     return serve_step
 
 
+def make_sharded_train_step(cfg, opt_cfg: adamw.OptConfig, mesh,
+                            num_microbatches: int = 1):
+    """jit the train step with state shardings assembled on ``mesh``.
+
+    The runnable sibling of :func:`lower_cell`'s train branch: same spec
+    assembly (``parallel/sharding.py`` rules for params, mirrored optimizer
+    specs), returned as ``(jitted_step, state_shardings, batch_shardings)``
+    so ``train/loop.py --mesh`` runs and checkpoints against real
+    NamedShardings.  The step must be *traced* under
+    ``ctx.use_mesh(mesh)`` (the loop does this) so kernel dispatch sees
+    the mesh and routes through the ``shard_map`` wrapper.
+    """
+    state_abs = S.abstract_state(cfg, opt_cfg)
+    pspec = shd.param_specs(state_abs["params"], mesh, cfg)
+    state_spec = {"params": pspec,
+                  "opt": _opt_specs(state_abs["opt"], pspec)}
+    state_sh = _ns(mesh, state_spec)
+    step_fn = make_train_step(cfg, opt_cfg, num_microbatches)
+    jitted = jax.jit(step_fn,
+                     in_shardings=(state_sh, None),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+
+    def batch_shardings(batch_abs):
+        return _ns(mesh, shd.batch_specs(cfg, mesh, batch_abs))
+
+    return jitted, state_sh, batch_shardings
+
+
 # ------------------------------------------------------------- lowering
 
 def _ns(mesh, spec_tree):

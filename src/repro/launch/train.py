@@ -31,6 +31,11 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=0, metavar="N",
+                    help="install a (devices/N, N) (data, model) host mesh "
+                         "and run the sharded train step (0 = no mesh); "
+                         "kernel dispatch then routes through the "
+                         "shard_map wrapper (see docs/parallel.md)")
     numerics.add_cli_overrides(ap)
     args = ap.parse_args()
 
@@ -48,11 +53,17 @@ def _main(args):
                       seq_len=args.seq)
     loop = TrainLoopConfig(total_steps=args.steps,
                            ckpt_every=args.ckpt_every)
+    mesh = None
+    if args.mesh_model:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.mesh_model)
+        print(f"mesh: {dict(mesh.shape)}", flush=True)
 
     def log(msg):
         print(msg, flush=True)
 
-    state, hist = train(cfg, opt, data, loop, args.ckpt_dir, log=log)
+    state, hist = train(cfg, opt, data, loop, args.ckpt_dir, log=log,
+                        mesh=mesh)
     for h in hist[:: max(len(hist) // 20, 1)]:
         print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
               f"{h['time_s']*1e3:7.1f} ms")

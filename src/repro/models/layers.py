@@ -251,11 +251,17 @@ def sdpa(q, k, v, cfg, q_pos, k_pos, causal=True, window=0):
 
     Takes the fused TCEC flash-attention kernel when
     ``kernels.dispatch.attention_eligible`` says so (declines off-TPU
-    without force, for plain policies, below ``min_dim``, under a GSPMD
-    mesh, or under either escape hatch), with the recompute backward
-    above; otherwise the pdot composition — ``blocked_attention`` for long
-    sequences, materialized-scores ``mha`` else.  The composition is also
-    the kernel's verification oracle (tests/test_attention.py)."""
+    without force, for plain policies, below ``min_dim``, or under either
+    escape hatch), with the recompute backward above; otherwise the pdot
+    composition — ``blocked_attention`` for long sequences,
+    materialized-scores ``mha`` else.  Under an installed GSPMD mesh the
+    fused route runs per device through the ``shard_map`` wrapper
+    (``kernels/shmap.py``: heads or q-sequence on ``model``, batch on the
+    data axes); specs the wrapper doesn't support — and
+    ``use(shard_map=False)`` / ``REPRO_SHARD_MAP=0`` — keep the pdot
+    composition, which carries the context-parallel sharding constraints.
+    The composition is also the kernel's verification oracle
+    (tests/test_attention.py)."""
     from repro.core.policy import get_policy
     from repro.kernels import dispatch
     if dispatch.attention_eligible(q, k, v, policy=cfg.mix_policy):

@@ -138,6 +138,11 @@ ENV_VARS: dict[str, EnvVar] = {v.name: v for v in [
            "Granular hatch: keep the rest but not the paged "
            "decode-attention kernel (restores exact dense parity).",
            field="paged_attention", invert=True),
+    EnvVar("REPRO_SHARD_MAP", "bool", True,
+           "Under an installed GSPMD mesh, wrap kernel dispatch in "
+           "shard_map (per-device shards; kernels/shmap.py).  0 declines "
+           "every dispatch under a mesh to the XLA fallback.",
+           field="shard_map"),
     EnvVar("REPRO_TUNE", "bool", False,
            "Force autotuner measurement even off-TPU.", field="tune"),
     EnvVar("REPRO_TUNE_DISABLE", "bool", False,
@@ -217,6 +222,7 @@ class NumericsConfig:
     attn_block: tuple | None = None   # (bq, bk) attention override
     paged_attention: bool = True    # paged decode-attention routing
     paged_block: int | None = None  # pages-per-step override
+    shard_map: bool = True          # mesh dispatch via kernels/shmap.py
     # -- autotuning ---------------------------------------------------
     tune: str = "auto"              # "auto" | "force" | "off"
     tune_cache: str = _DEFAULT_TUNE_CACHE
@@ -264,6 +270,7 @@ class NumericsConfig:
                                           environ),
             paged_attention=not env_value("REPRO_DISABLE_PAGED_ATTN",
                                           environ),
+            shard_map=env_value("REPRO_SHARD_MAP", environ),
             tune=tune,
             tune_cache=env_value("REPRO_TUNE_CACHE", environ),
             keep_bf16_dots=env_value("REPRO_KEEP_BF16_DOTS", environ),

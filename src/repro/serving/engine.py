@@ -46,6 +46,22 @@ from .sampling import SamplingParams
 from .scheduler import Request, RequestState, Scheduler
 
 
+def _pool_spec(shape, mesh):
+    """PartitionSpec for one page-pool leaf ``(..., Hkv, hd)``: KV heads
+    on ``model`` when divisible (the paged plan's layout), else head_dim
+    (always a multiple of 16 in the zoo — ``parallel/sharding.py``'s
+    cache convention), else replicated."""
+    from jax.sharding import PartitionSpec as P
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    dims = [None] * len(shape)
+    if msize > 1 and len(shape) >= 2:
+        if shape[-2] % msize == 0:
+            dims[-2] = "model"
+        elif shape[-1] % msize == 0:
+            dims[-1] = "model"
+    return P(*dims)
+
+
 class Engine:
     """Continuous-batching engine for the KV-cache model families
     (``dense``/``moe``, including MLA and sliding-window variants).
@@ -61,12 +77,20 @@ class Engine:
                  num_pages: int | None = None,
                  page_size: int = DEFAULT_PAGE_SIZE,
                  max_pages_per_slot: int | None = None,
-                 numerics_config: numerics.NumericsConfig | None = None):
+                 numerics_config: numerics.NumericsConfig | None = None,
+                 mesh=None):
         # the engine's kernel-dispatch recipe is pinned at construction:
         # every jitted step runs under this scope, so an ambient
         # numerics.use(...) entered mid-serve can't flip an in-flight
         # trace's dispatch decisions out from under the KV cache
         self.numerics_config = numerics_config or numerics.active()
+        # likewise the mesh: captured from the installed context (or taken
+        # explicitly) at construction.  Every jitted step then traces
+        # under it, so paged decode routes through the shard_map wrapper
+        # (kernels/shmap.py) and the page pools live sharded on device —
+        # KV heads on the "model" axis, tables/lengths device-local.
+        from repro.parallel import ctx as _pctx
+        self.mesh = mesh if mesh is not None else _pctx.current_mesh()
         model = get_model(cfg)
         if model.decode_step_paged is None:
             raise ValueError(
@@ -84,6 +108,8 @@ class Engine:
         self.max_slots = max_slots
         self.max_pages_per_slot = max_pages_per_slot
         self.pools = model.init_paged_cache(num_pages, page_size)
+        if self.mesh is not None:
+            self.pools = jax.device_put(self.pools, self._pool_shardings())
         # host mirrors of the per-slot device state
         self.block_tables = np.zeros((max_slots, max_pages_per_slot),
                                      np.int32)
@@ -104,6 +130,33 @@ class Engine:
         self._prefill = jax.jit(lambda p, toks: model.prefill(p, toks))
         self.n_decode_steps = 0
         self.n_prefills = 0
+
+    def _pool_shardings(self):
+        """Multi-device pool layout: shard each page pool's KV-head dim
+        (axis -2) on the ``model`` axis when it divides — the same layout
+        ``kernels/shmap.py``'s paged plan shards the kernel over, so the
+        decode step never reshards the cache.  When the head count does
+        not divide (kv_heads < model size), fall back to sharding head_dim
+        (axis -1) — the KV-cache convention of ``parallel/sharding.py`` —
+        so pool capacity still scales with TP; the fused kernel declines
+        for that layout and the XLA gather fallback carries the sharding.
+        Everything else (page and token dims) stays replicated."""
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda leaf: NamedSharding(
+                self.mesh, _pool_spec(leaf.shape, self.mesh)),
+            self.pools)
+
+    def _scopes(self):
+        """The construction-pinned numerics + mesh scopes every engine
+        step (prefill and decode) runs under."""
+        import contextlib
+        from repro.parallel import ctx as _pctx
+        scope = contextlib.ExitStack()
+        scope.enter_context(numerics.use(self.numerics_config))
+        if self.mesh is not None:
+            scope.enter_context(_pctx.use_mesh(self.mesh))
+        return scope
 
     # ------------------------------------------------------------ intake
 
@@ -241,9 +294,9 @@ class Engine:
 
     def step(self):
         """One engine iteration: admit + prefill, then one decode step for
-        whatever is in flight — under the construction-time numerics
-        scope."""
-        with numerics.use(self.numerics_config):
+        whatever is in flight — under the construction-time numerics and
+        mesh scopes."""
+        with self._scopes():
             self._admit_and_prefill()
             self._ensure_pages()
             self._decode_step()

@@ -20,6 +20,7 @@ CPU test suite at small scale):
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import time
 from dataclasses import dataclass
@@ -28,7 +29,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import manager as ckpt
-from repro.data.pipeline import DataConfig, device_batch
+from repro.data.pipeline import DataConfig, device_batch, host_batch
 from repro.models import get_model
 from repro.optim import adamw
 
@@ -48,12 +49,41 @@ class StragglerEvent(RuntimeError):
 
 def train(cfg, opt_cfg: adamw.OptConfig, data_cfg: DataConfig,
           loop_cfg: TrainLoopConfig, ckpt_dir: str,
-          train_step=None, shardings=None, log=print):
-    """Run (or resume) a training job; returns (state, history)."""
+          train_step=None, shardings=None, log=print, mesh=None):
+    """Run (or resume) a training job; returns (state, history).
+
+    ``mesh``: an optional GSPMD mesh.  When given, the step jits with the
+    framework's param/optimizer shardings (``launch.step.
+    make_sharded_train_step``), batches land pre-sharded on the data axes,
+    and the whole loop runs under ``parallel.ctx.use_mesh`` — so kernel
+    dispatch sees the mesh at trace time and routes eligible contractions
+    and attention through the ``shard_map``-wrapped Pallas kernels
+    (``kernels/shmap.py``) instead of declining to the XLA fallback.
+    """
+    from repro.parallel import ctx as pctx
+    from repro.parallel import sharding as shd
     model = get_model(cfg)
+    batch_sharder = None
     if train_step is None:
-        from repro.launch.step import make_train_step
-        train_step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=0)
+        if mesh is not None:
+            from repro.launch.step import make_sharded_train_step
+            train_step, state_sh, batch_sharder = make_sharded_train_step(
+                cfg, opt_cfg, mesh)
+            if shardings is None:
+                shardings = state_sh
+        else:
+            from repro.launch.step import make_train_step
+            train_step = jax.jit(make_train_step(cfg, opt_cfg),
+                                 donate_argnums=0)
+    mesh_scope = (pctx.use_mesh(mesh, shd.batch_axes(cfg, mesh))
+                  if mesh is not None else contextlib.nullcontext())
+    with mesh_scope:
+        return _run(cfg, opt_cfg, data_cfg, loop_cfg, ckpt_dir, train_step,
+                    shardings, log, model, batch_sharder)
+
+
+def _run(cfg, opt_cfg, data_cfg, loop_cfg, ckpt_dir, train_step, shardings,
+         log, model, batch_sharder):
 
     # ---- resume or init ---------------------------------------------------
     start = ckpt.latest_step(ckpt_dir)
@@ -80,9 +110,12 @@ def train(cfg, opt_cfg: adamw.OptConfig, data_cfg: DataConfig,
 
     history = []
     ema = None
+    batch_sh = None
     try:
         for step in range(step0, loop_cfg.total_steps):
-            batch = device_batch(cfg, data_cfg, step, shardings=None)
+            if batch_sharder is not None and batch_sh is None:
+                batch_sh = batch_sharder(host_batch(cfg, data_cfg, step))
+            batch = device_batch(cfg, data_cfg, step, shardings=batch_sh)
             t0 = time.time()
             state, metrics = train_step(state, batch)
             loss = float(metrics["loss"])

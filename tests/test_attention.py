@@ -338,10 +338,13 @@ def test_dispatch_declines_when_min_block_exceeds_vmem():
         assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
 
 
-def test_dispatch_declines_under_mesh():
-    """The fused path carries no sharding constraints; under an installed
-    GSPMD mesh the distributed pdot fallback must keep the call."""
+def test_dispatch_under_mesh_routes_or_declines():
+    """Under an installed GSPMD mesh the fused path now runs through the
+    ``shard_map`` wrapper (kernels/shmap.py).  It declines only when the
+    knob is off (``use(shard_map=False)`` / ``REPRO_SHARD_MAP=0``) or the
+    installed spec is unsupported — the pdot fallback keeps those calls."""
     from jax.sharding import Mesh
+    from repro.kernels import shmap
     from repro.parallel import ctx
     q = jnp.ones((1, 128, 4, 64))
     k = jnp.ones((1, 128, 2, 64))
@@ -349,9 +352,27 @@ def test_dispatch_declines_under_mesh():
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
     with numerics.use(force=True, interpret=True, min_dim=0,
                            attn_block=(128, 128)):
-        assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is not None
+        ref = dispatch.attention(q, k, v, policy="tcec_bf16x6")
+        assert ref is not None
         with ctx.use_mesh(mesh):
-            assert dispatch.attention(q, k, v, policy="tcec_bf16x6") is None
+            n0 = shmap.CALLS["attention"]
+            out = dispatch.attention(q, k, v, policy="tcec_bf16x6")
+            assert out is not None                      # routed, not declined
+            assert shmap.CALLS["attention"] == n0 + 1   # via the wrapper
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+            # the knob restores the decline
+            with numerics.use(shard_map=False):
+                assert not dispatch.attention_eligible(
+                    q, k, v, policy="tcec_bf16x6")
+                assert dispatch.attention(q, k, v,
+                                          policy="tcec_bf16x6") is None
+        # unsupported spec (model axis divides neither Hkv nor S): decline
+        class _FakeMesh:
+            shape = {"model": 3}
+            axis_names = ("model",)
+        with ctx.use_mesh(_FakeMesh()):
+            assert not dispatch.attention_eligible(q, k, v,
+                                                   policy="tcec_bf16x6")
 
 
 # ------------------------------------------- XLA fallback causal shortcut

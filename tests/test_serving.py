@@ -333,13 +333,33 @@ def test_paged_dispatch_eligibility_and_hatches(monkeypatch):
     numerics.reload_env_defaults()
 
 
-def test_paged_dispatch_declines_under_mesh():
+def test_paged_dispatch_under_mesh_routes_or_declines():
+    """Under a mesh the paged kernel runs per shard through shard_map
+    (kernels/shmap.py); the knob / an unsupported spec decline."""
     from jax.sharding import Mesh
+    from repro.kernels import shmap
     from repro.parallel import ctx
     q, kp, vp, bt, lengths = _paged_case(seed=15)
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
     with numerics.use(force=True, interpret=True):
+        ref = dispatch.attention_decode(q, kp, vp, bt, lengths,
+                                        policy="tcec_bf16x6")
         with ctx.use_mesh(mesh):
+            assert dispatch.attention_decode_eligible(
+                q, kp, vp, policy="tcec_bf16x6")
+            n0 = shmap.CALLS["paged"]
+            out = dispatch.attention_decode(q, kp, vp, bt, lengths,
+                                            policy="tcec_bf16x6")
+            assert out is not None and shmap.CALLS["paged"] == n0 + 1
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+            with numerics.use(shard_map=False):
+                assert not dispatch.attention_decode_eligible(
+                    q, kp, vp, policy="tcec_bf16x6")
+
+        class _FakeMesh:                   # Hkv not divisible by the axis
+            shape = {"model": max(3, kp.shape[2] + 1)}
+            axis_names = ("model",)
+        with ctx.use_mesh(_FakeMesh()):
             assert not dispatch.attention_decode_eligible(
                 q, kp, vp, policy="tcec_bf16x6")
 
