@@ -16,7 +16,8 @@ import numpy as np
 
 from repro import VMEM_BUDGET, get_policy, tcec_matmul, tuning, vmem_bytes
 from repro.core.matgen import relative_residual, urand
-from .common import OUT_DIR, emit
+from . import common
+from .common import emit, record
 
 CAND = [128, 256, 512]
 
@@ -53,10 +54,14 @@ def run():
          ["block", "VMEM", "status", "rel.residual"], rows,
          f"{n_total} candidates -> {n_vmem_ok} fit VMEM -> {n_acc_ok} pass "
          "the 0.1 accuracy threshold (paper's filter pipeline)")
+    record("blocksweep/candidates", n_total, unit="count")
+    record("blocksweep/vmem_ok", n_vmem_ok, unit="count")
+    record("blocksweep/acc_ok", n_acc_ok, unit="count")
 
     # ---- part 2: measured autotuner vs static heuristic -----------------
-    os.makedirs(OUT_DIR, exist_ok=True)
-    cache = tuning.BlockCache(path=os.path.join(OUT_DIR, "autotune.json"))
+    os.makedirs(common.OUT_DIR, exist_ok=True)
+    cache = tuning.BlockCache(path=os.path.join(common.OUT_DIR,
+                                                "autotune.json"))
     M = N = K = 256
     heur = tuning.heuristic_block(M, N, K, pol)
     tuned, meta = tuning.autotune(
@@ -78,4 +83,13 @@ def run():
           "best time", "source"], trows,
          f"re-lookup source={meta2['source']}; {n_persisted} entr(y/ies) "
          f"persisted to {cache.path}")
+    record("blocksweep/cache_roundtrip",
+           float(meta2["source"] == "cache"))
+    record("blocksweep/persisted_entries", n_persisted, unit="count")
+    if meta.get("ms"):
+        # interpret-mode wall clock of the winning block: ordering-only
+        # signal; 100% self-noise so only a >4x blowup vs baseline gates
+        record("blocksweep/tuned_best_ms", meta["ms"], unit="ms",
+               kind="measured", higher_is_better=False,
+               noise=float(meta["ms"]))
     return n_acc_ok > 0 and meta2["source"] == "cache"

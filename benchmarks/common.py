@@ -1,13 +1,20 @@
-"""Shared benchmark helpers: table formatting + result registry."""
+"""Shared benchmark helpers: table formatting, a blocking timer, and the
+machine-readable snapshot recorder behind ``benchmarks/run.py --snapshot``
+/ ``benchmarks/compare.py`` (see benchmarks/README.md §Snapshots)."""
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
+
+import jax
 
 from repro.numerics import env_value
 
 OUT_DIR = env_value("REPRO_BENCH_OUT")
+
+SCHEMA_VERSION = 1
 
 
 def table(title: str, headers: list[str], rows: list[list]) -> str:
@@ -34,9 +41,111 @@ def emit(name: str, title: str, headers, rows, notes: str = ""):
     return txt
 
 
-def timed(fn, *args, reps=3):
-    fn(*args)  # warmup/compile
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn(*args)
-    return out, (time.time() - t0) / reps
+# ------------------------------------------------------- blocking timer
+
+def block(x):
+    """Wait for every async leaf of a pytree; returns x unchanged."""
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return x
+
+
+def timed(fn, *args, reps: int = 3, warmup: int = 1):
+    """Time ``fn(*args)`` with ``reps`` blocking reps after ``warmup``
+    untimed calls (compile + cache warm).
+
+    jax dispatch is async: an unblocked wall-clock delta times the
+    *enqueue*, not the compute, so every call — warmup included — blocks
+    on the output before the clock is read.  Returns ``(out, mean_s,
+    samples)``; the per-rep ``samples`` feed :func:`record_timed` so
+    ``compare.py`` gets a real noise estimate instead of a guess.
+    """
+    out = None
+    for _ in range(max(0, warmup)):
+        out = block(fn(*args))
+    samples = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        out = block(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return out, sum(samples) / len(samples), samples
+
+
+def _stdev(samples) -> float:
+    if len(samples) < 2:
+        return 0.0
+    mean = sum(samples) / len(samples)
+    return math.sqrt(sum((s - mean) ** 2 for s in samples)
+                     / (len(samples) - 1))
+
+
+def noise_probe(reps: int = 5) -> float:
+    """Relative wall-clock jitter (std/mean) of a tiny jitted op — the
+    environment's timing-noise fingerprint recorded in every snapshot."""
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x @ x)
+    x = jnp.ones((128, 128), jnp.float32)
+    _, mean, samples = timed(f, x, reps=reps, warmup=2)
+    return _stdev(samples) / mean if mean else 0.0
+
+
+# --------------------------------------------------- snapshot recorder
+#
+# run.py --snapshot brackets each bench with begin_snapshot()/
+# end_snapshot(); bench modules call record()/record_timed() as they go
+# (no-ops outside snapshot mode, so plain runs cost nothing).
+
+_METRICS: dict | None = None
+
+
+def snapshot_active() -> bool:
+    return _METRICS is not None
+
+
+def begin_snapshot():
+    global _METRICS
+    _METRICS = {}
+
+
+def end_snapshot() -> dict:
+    global _METRICS
+    metrics, _METRICS = _METRICS or {}, None
+    return metrics
+
+
+def record(name: str, value, *, unit: str = "", kind: str = "analytic",
+           higher_is_better: bool = True, noise: float = 0.0):
+    """Record one numeric snapshot metric (no-op outside snapshot mode).
+
+    ``kind="analytic"`` — deterministic (model-derived or counted):
+    compare.py gates it at a tight relative floor and the determinism
+    test requires it bit-identical across runs.  ``kind="measured"`` —
+    wall-clock derived: gated against max(noise band, measured floor)
+    and excluded from determinism checks.
+    """
+    if _METRICS is None:
+        return
+    assert kind in ("analytic", "measured"), kind
+    if not math.isfinite(float(value)):
+        # Infinity/NaN would serialize as nonstandard JSON and poison
+        # every future comparison of this metric — fail at the source
+        raise ValueError(f"non-finite snapshot metric {name}={value!r}")
+    _METRICS[name] = {"value": float(value), "unit": unit, "kind": kind,
+                      "higher_is_better": bool(higher_is_better),
+                      "noise": float(noise)}
+
+
+def record_timed(name: str, samples, *, unit: str = "s",
+                 higher_is_better: bool = False, transform=None):
+    """Record a measured metric from :func:`timed` per-rep samples.
+
+    ``transform`` maps mean seconds to the reported value (e.g.
+    ``lambda s: toks / s`` for tok/s); the relative jitter of the raw
+    samples carries through as the metric's noise.
+    """
+    mean = sum(samples) / len(samples)
+    value = transform(mean) if transform is not None else mean
+    rel = _stdev(samples) / mean if mean else 0.0
+    record(name, value, unit=unit, kind="measured",
+           higher_is_better=higher_is_better, noise=abs(value) * rel)

@@ -1,0 +1,193 @@
+"""Regression gate over persisted benchmark snapshots.
+
+``run.py --snapshot`` writes one ``BENCH_<name>.json`` per bench
+(committed at the repo root as the per-PR throughput trajectory); this
+module diffs a regenerated candidate set against those baselines and
+exits nonzero when any metric regressed beyond its noise band:
+
+    PYTHONPATH=src python -m benchmarks.run --snapshot \\
+        --snapshot-dir experiments/bench/snapshots
+    PYTHONPATH=src python -m benchmarks.compare \\
+        --baseline . --candidate experiments/bench/snapshots
+
+Per-metric band (see benchmarks/README.md §Noise bands):
+
+    band = max(sigmas * max(noise_base, noise_cand),
+               floor * |base value|, 1e-12)
+
+where ``floor`` is ``--rel-floor`` (default 2%) for ``analytic``
+metrics and ``--measured-floor`` (default 50%) for ``measured``
+wall-clock metrics, and ``noise`` is the per-rep jitter recorded by
+``common.timed``.  A delta in the bad direction beyond the band is a
+regression (exit 1); improvements and within-band drift pass; a metric
+present on only one side is reported but never gates (kernels and
+tuning caches legitimately add/remove rows); a missing baseline file is
+a clean first-run pass.  Measured metrics only gate when baseline and
+candidate ran on the same jax backend — cross-machine wall clock is not
+comparable.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_SIGMAS = 3.0
+DEFAULT_REL_FLOOR = 0.02
+DEFAULT_MEASURED_FLOOR = 0.50
+ABS_FLOOR = 1e-12
+
+# statuses that never flip the exit code
+NON_GATING = ("ok", "improved", "added", "removed", "ungated")
+
+
+def load_snapshot(path: str) -> dict:
+    with open(path) as f:
+        snap = json.load(f)
+    for key in ("bench", "metrics", "env"):
+        if key not in snap:
+            raise ValueError(f"{path}: not a BENCH snapshot (missing "
+                             f"{key!r})")
+    return snap
+
+
+def band(base: dict, cand: dict, *, sigmas: float = DEFAULT_SIGMAS,
+         rel_floor: float = DEFAULT_REL_FLOOR,
+         measured_floor: float = DEFAULT_MEASURED_FLOOR) -> float:
+    floor = (measured_floor if base.get("kind") == "measured"
+             else rel_floor)
+    return max(sigmas * max(base.get("noise", 0.0), cand.get("noise", 0.0)),
+               floor * abs(base["value"]), ABS_FLOOR)
+
+
+def compare_metrics(base: dict, cand: dict, *, sigmas=DEFAULT_SIGMAS,
+                    rel_floor=DEFAULT_REL_FLOOR,
+                    measured_floor=DEFAULT_MEASURED_FLOOR,
+                    gate_measured: bool = True) -> list[dict]:
+    """Metric-by-metric findings for two ``metrics`` dicts.
+
+    Statuses: ``ok`` (within band), ``improved``, ``regression``,
+    ``ungated`` (would regress but measured gating is off),
+    ``added`` / ``removed`` (present on one side only).
+    """
+    findings = []
+    for name in sorted(set(base) | set(cand)):
+        if name not in base:
+            findings.append({"metric": name, "status": "added",
+                             "cand": cand[name]["value"]})
+            continue
+        if name not in cand:
+            findings.append({"metric": name, "status": "removed",
+                             "base": base[name]["value"]})
+            continue
+        b, c = base[name], cand[name]
+        w = band(b, c, sigmas=sigmas, rel_floor=rel_floor,
+                 measured_floor=measured_floor)
+        delta = c["value"] - b["value"]
+        if not b.get("higher_is_better", True):
+            delta = -delta          # now: positive delta == better
+        if delta < -w:
+            status = "regression"
+            if b.get("kind") == "measured" and not gate_measured:
+                status = "ungated"
+        elif delta > w:
+            status = "improved"
+        else:
+            status = "ok"
+        findings.append({"metric": name, "status": status,
+                         "base": b["value"], "cand": c["value"],
+                         "band": w, "delta": delta})
+    return findings
+
+
+def compare_snapshots(base_snap: dict, cand_snap: dict,
+                      **kw) -> tuple[bool, list[dict]]:
+    """Compare two loaded snapshots; returns ``(passed, findings)``."""
+    same_backend = (base_snap.get("env", {}).get("backend")
+                    == cand_snap.get("env", {}).get("backend"))
+    kw.setdefault("gate_measured", same_backend)
+    findings = compare_metrics(base_snap.get("metrics", {}),
+                               cand_snap.get("metrics", {}), **kw)
+    if base_snap.get("ok", True) and not cand_snap.get("ok", True):
+        findings.insert(0, {"metric": "<bench claim>",
+                            "status": "regression",
+                            "base": 1.0, "cand": 0.0, "band": 0.0,
+                            "delta": -1.0})
+    passed = all(f["status"] in NON_GATING for f in findings)
+    return passed, findings
+
+
+def _fmt(v) -> str:
+    return f"{v:.6g}" if isinstance(v, float) else str(v)
+
+
+def report(name: str, findings: list[dict], verbose: bool = False):
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f["status"]] = counts.get(f["status"], 0) + 1
+    summary = ", ".join(f"{v} {k}" for k, v in sorted(counts.items()))
+    print(f"  {name}: {summary or 'no shared metrics'}")
+    for f in findings:
+        if f["status"] == "ok" and not verbose:
+            continue
+        parts = [f"    [{f['status']:>10}] {f['metric']}"]
+        if "base" in f and "cand" in f:
+            parts.append(f"{_fmt(f['base'])} -> {_fmt(f['cand'])} "
+                         f"(band {_fmt(f['band'])})")
+        elif "cand" in f:
+            parts.append(f"-> {_fmt(f['cand'])}")
+        elif "base" in f:
+            parts.append(f"{_fmt(f['base'])} -> (gone)")
+        print(" ".join(parts))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--baseline", default=".",
+                    help="dir holding the committed BENCH_*.json")
+    ap.add_argument("--candidate", default="experiments/bench/snapshots",
+                    help="dir holding the regenerated snapshots")
+    ap.add_argument("--sigmas", type=float, default=DEFAULT_SIGMAS)
+    ap.add_argument("--rel-floor", type=float, default=DEFAULT_REL_FLOOR,
+                    help="relative band floor for analytic metrics")
+    ap.add_argument("--measured-floor", type=float,
+                    default=DEFAULT_MEASURED_FLOOR,
+                    help="relative band floor for measured (wall-clock) "
+                         "metrics")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print within-band metrics too")
+    args = ap.parse_args(argv)
+
+    cand_files = sorted(glob.glob(os.path.join(args.candidate,
+                                               "BENCH_*.json")))
+    if not cand_files:
+        print(f"compare: no BENCH_*.json under {args.candidate!r} — "
+              "run `python -m benchmarks.run --snapshot` first")
+        return 2
+    failed = []
+    for cf in cand_files:
+        fname = os.path.basename(cf)
+        bf = os.path.join(args.baseline, fname)
+        if not os.path.exists(bf):
+            print(f"  {fname}: no committed baseline — first-run pass "
+                  "(commit the regenerated snapshot)")
+            continue
+        passed, findings = compare_snapshots(
+            load_snapshot(bf), load_snapshot(cf), sigmas=args.sigmas,
+            rel_floor=args.rel_floor, measured_floor=args.measured_floor)
+        report(fname, findings, verbose=args.verbose)
+        if not passed:
+            failed.append(fname)
+    if failed:
+        print(f"compare: REGRESSION in {', '.join(failed)} — if the "
+              "change is intentional, regenerate and commit the "
+              "baselines (benchmarks/README.md §Refreshing baselines)")
+        return 1
+    print(f"compare: {len(cand_files)} snapshot(s) pass")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import policy_mm
 from repro.core.matgen import exp_rand, relative_residual
-from .common import emit
+from .common import emit, record
 
 METHODS = ["fp32", "tcec_bf16x6", "fp16_halfhalf"]
 
@@ -42,6 +42,8 @@ def run():
             c = policy_mm(jnp.asarray(a), jnp.asarray(b), m)
             r = relative_residual(np.asarray(c), a, b)
             res[(tname, m)] = r
+            record(f"fig11/{tname}/{m}/residual", r, unit="rel",
+                   higher_is_better=False)
             cells.append(f"{r:.2e}")
         rows.append([tname] + cells)
     ok = True

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 from repro.core import policy_mm
 from repro.core.matgen import (cauchy, exp_rand, randtlr, relative_residual,
                                spatial, urand)
-from .common import emit
+from .common import emit, record
 
 METHODS = ["fp32", "tcec_bf16x6", "tcec_bf16x3", "bf16"]
 
@@ -25,6 +25,8 @@ def run():
             for m in METHODS:
                 c = policy_mm(jnp.asarray(a), jnp.asarray(b), m)
                 r = relative_residual(np.asarray(c), a, b)
+                record(f"fig13/{an}x{bn.split('(')[0]}/{m}/residual", r,
+                       unit="rel", higher_is_better=False)
                 cells.append(f"{r:.2e}")
             r32 = float(cells[0].replace("e", "E"))
             r6 = float(cells[1].replace("e", "E"))

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core import policy_mm
 from repro.core.matgen import relative_residual, urand
-from .common import emit
+from .common import emit, record
 
 KS = [32, 128, 512, 2048, 8192]
 METHODS = ["fp32", "bf16", "tcec_bf16x3", "tcec_bf16x6",
@@ -28,6 +28,8 @@ def run():
                 c = policy_mm(jnp.asarray(a), jnp.asarray(b), m)
                 vals.append(relative_residual(np.asarray(c), a, b))
             errs[m] = float(np.mean(vals))
+            record(f"fig1/k{k}/{m}/residual", errs[m], unit="rel",
+                   higher_is_better=False)
         rows.append([k] + [f"{errs[m]:.2e}" for m in METHODS])
     checks = []
     # invariants from the paper's figure

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import policy_mm
 from repro.core.matgen import relative_residual, urand
-from .common import emit
+from .common import emit, record
 
 
 def _truncate_lsb(x: np.ndarray) -> np.ndarray:
@@ -29,6 +29,10 @@ def run():
         r_32 = relative_residual(
             np.asarray(policy_mm(jnp.asarray(a), jnp.asarray(b), "fp32")), a, b)
         rows.append([k, f"{r_32:.2e}", f"{r_tr:.2e}", f"{r_mk:.2e}"])
+        for tag, r in [("fp32", r_32), ("truncate_lsb", r_tr),
+                       ("markidis_rz", r_mk)]:
+            record(f"fig4/k{k}/{tag}/residual", r, unit="rel",
+                   higher_is_better=False)
         if k >= 1024:
             ok &= r_mk > r_tr  # the paper's point
     emit("fig4_mantissa",

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.core import policy_mm
 from repro.core.accum import markidis_gemm_sim
 from repro.core.matgen import relative_residual, urand
-from .common import emit
+from .common import emit, record
 
 
 def run():
@@ -21,6 +21,9 @@ def run():
         r_32 = relative_residual(
             np.asarray(policy_mm(jnp.asarray(a), jnp.asarray(b), "fp32")), a, b)
         rows.append([k, f"{r_32:.2e}", f"{r_rn:.2e}", f"{r_rz:.2e}"])
+        for tag, r in [("fp32", r_32), ("mma_rn", r_rn), ("mma_rz", r_rz)]:
+            record(f"fig5/k{k}/{tag}/residual", r, unit="rel",
+                   higher_is_better=False)
         if k >= 1024:
             ok &= (r_rn <= 3 * r_32) and (r_rz > 5 * r_rn)
     emit("fig5_rounding",

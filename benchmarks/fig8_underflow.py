@@ -3,12 +3,13 @@ residual cast (Eqs. 15/17) vs Monte-Carlo with real IEEE casts, for the
 paper's FP16 and this framework's bf16 — plus the scaled variants (Eq. 18)
 that eliminate them."""
 from repro.core import theory
-from .common import emit
+from .common import emit, record
 
 
 def run():
     rows = []
     ok = True
+    gap = 0.0
     for e_v in [-24, -14, -8, -4, 0, 4]:
         pt = theory.p_underflow_gradual(e_v, theory.FP16)
         pu = theory.p_underflow(e_v, theory.FP16)
@@ -16,10 +17,14 @@ def run():
         pts = theory.p_underflow_gradual(e_v, theory.FP16, scale_bits=11)
         rows.append([e_v, f"{pt:.4f}", f"{mgu:.4f}", f"{pu:.2e}",
                      f"{mu:.2e}", f"{pts:.4f}"])
+        gap = max(gap, abs(pt - mgu))
         ok &= abs(pt - mgu) < 5e-3
     # bf16: no underflow anywhere in the moderate range (tf32-like claim)
     bf_ok = all(theory.p_underflow_gradual(e, theory.BF16, scale_bits=8) == 0
                 for e in range(-100, 101, 10))
+    record("fig8/theory_vs_mc_max_gap", gap, unit="prob",
+           higher_is_better=False)
+    record("fig8/bf16_scaled_zero_underflow", float(bf_ok))
     emit("fig8_underflow",
          "Fig.8 — P_u+gu / P_u: theory (Eq.15/17) vs Monte-Carlo (fp16)",
          ["e_v", "P_u+gu theory", "P_u+gu measured", "P_u theory",

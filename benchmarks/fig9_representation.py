@@ -5,7 +5,7 @@ budget."""
 import numpy as np
 
 from repro.core.theory import representable_relative_error
-from .common import emit
+from .common import emit, record
 
 SCHEMES = ["fp32", "bf16", "fp16", "tcec_bf16x3", "tcec_bf16x6",
            "fp16_halfhalf", "fp16_markidis"]
@@ -26,11 +26,18 @@ def run():
     for e_i, e in enumerate([-40, -20, -10, 0, 10, 30]):
         vals = (rng.uniform(1, 2, 4096) * 2.0 ** e).astype(np.float32)
         r6 = np.max(representable_relative_error(vals, "tcec_bf16x6"))
+        record(f"fig9/scale2^{e}/tcec_bf16x6/max_rel_err", float(r6),
+               unit="rel", higher_is_better=False)
         ok &= r6 < 2 ** -21
     # fp16 halfhalf degrades below ~2^-14 (paper Fig. 9 left tail)
     tail = (rng.uniform(1, 2, 4096) * 2.0 ** -40).astype(np.float32)
     hh = np.max(representable_relative_error(tail, "fp16_halfhalf"))
     b6 = np.max(representable_relative_error(tail, "tcec_bf16x6"))
+    # recorded separately: the ratio is infinite (b6 is exactly 0 there)
+    record("fig9/tail2^-40/fp16_halfhalf/max_rel_err", float(hh),
+           unit="rel", higher_is_better=False)
+    record("fig9/tail2^-40/tcec_bf16x6/max_rel_err", float(b6),
+           unit="rel", higher_is_better=False)
     ok &= hh > b6
     emit("fig9_representation",
          "Fig.9 — max relative representation error per value scale",

@@ -2,47 +2,148 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig1 fig5  # subset
+  PYTHONPATH=src python -m benchmarks.run --snapshot # smoke throughput
+                                                     # set -> BENCH_*.json
+
+``--snapshot`` brackets each bench with the recorder in
+``benchmarks/common.py`` and writes one ``BENCH_<name>.json`` per bench
+(default: at the repo root, where they are committed per PR as the
+throughput trajectory ``benchmarks/compare.py`` gates CI on).  The
+default snapshot set is the throughput benches (fig14, fig14attn,
+blocksweep, serving — all registered in smoke form); name others
+explicitly to snapshot them too.  When ``experiments/dryrun/*.json``
+records exist, a ``BENCH_roofline.json`` with the roofline fractions
+from ``repro.launch.roofline`` is written as well.
 """
+import argparse
+import collections
+import json
+import os
+import subprocess
 import sys
 import time
-import types
 
-from . import (blocksweep, fig1_accuracy, fig4_mantissa, fig5_rounding,
-               fig8_underflow, fig9_representation, fig11_exponent_range,
-               fig13_patterns, fig14_throughput, serving_throughput,
-               table12_mantissa_expectation)
+from . import (blocksweep, common, fig1_accuracy, fig4_mantissa,
+               fig5_rounding, fig8_underflow, fig9_representation,
+               fig11_exponent_range, fig13_patterns, fig14_throughput,
+               serving_throughput, table12_mantissa_expectation)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+Bench = collections.namedtuple("Bench", ["label", "runner"])
 
 BENCHES = {
-    "table12": table12_mantissa_expectation,
-    "fig1": fig1_accuracy,
-    "fig4": fig4_mantissa,
-    "fig5": fig5_rounding,
-    "fig8": fig8_underflow,
-    "fig9": fig9_representation,
-    "fig11": fig11_exponent_range,
-    "fig13": fig13_patterns,
-    "fig14": fig14_throughput,
-    "fig14attn": types.SimpleNamespace(
-        run=lambda: fig14_throughput.run_attention(smoke=True),
-        __name__="benchmarks.fig14_throughput:attention"),
-    "blocksweep": blocksweep,
-    "serving": types.SimpleNamespace(
-        run=lambda: serving_throughput.run(smoke=True),
-        __name__="benchmarks.serving_throughput:smoke"),
+    "table12": Bench("benchmarks.table12_mantissa_expectation",
+                     table12_mantissa_expectation.run),
+    "fig1": Bench("benchmarks.fig1_accuracy", fig1_accuracy.run),
+    "fig4": Bench("benchmarks.fig4_mantissa", fig4_mantissa.run),
+    "fig5": Bench("benchmarks.fig5_rounding", fig5_rounding.run),
+    "fig8": Bench("benchmarks.fig8_underflow", fig8_underflow.run),
+    "fig9": Bench("benchmarks.fig9_representation", fig9_representation.run),
+    "fig11": Bench("benchmarks.fig11_exponent_range",
+                   fig11_exponent_range.run),
+    "fig13": Bench("benchmarks.fig13_patterns", fig13_patterns.run),
+    "fig14": Bench("benchmarks.fig14_throughput", fig14_throughput.run),
+    "fig14attn": Bench("benchmarks.fig14_throughput:attention",
+                       lambda: fig14_throughput.run_attention(smoke=True)),
+    "blocksweep": Bench("benchmarks.blocksweep", blocksweep.run),
+    "serving": Bench("benchmarks.serving_throughput:smoke",
+                     lambda: serving_throughput.run(smoke=True)),
 }
+
+# the per-PR throughput trajectory: what --snapshot writes by default
+SNAPSHOT_DEFAULT = ["fig14", "fig14attn", "blocksweep", "serving"]
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def env_fingerprint() -> dict:
+    """Where/how this snapshot was measured — compare.py relaxes
+    measured-metric gating when the backend differs."""
+    import jax
+    from repro import numerics
+    return {"backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "policy": numerics.active().policy,
+            "jax_version": jax.__version__,
+            "git_sha": git_sha(),
+            "noise_rel": round(common.noise_probe(), 4)}
+
+
+def write_snapshot(path: str, name: str, ok: bool, env: dict,
+                   metrics: dict):
+    snap = {"schema": common.SCHEMA_VERSION, "bench": name,
+            "ok": bool(ok), "env": env, "metrics": metrics}
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def roofline_snapshot(snapshot_dir: str, env: dict,
+                      dryrun_dir: str = "experiments/dryrun") -> bool:
+    """Write BENCH_roofline.json from dry-run records, if any exist."""
+    from repro.launch import roofline
+    recs = roofline.load(dryrun_dir) if os.path.isdir(dryrun_dir) else []
+    metrics = roofline.snapshot_metrics(recs)
+    if not metrics:
+        return False
+    write_snapshot(os.path.join(snapshot_dir, "BENCH_roofline.json"),
+                   "roofline", True, env, metrics)
+    return True
 
 
 def main(argv=None) -> int:
-    names = (argv or sys.argv[1:]) or list(BENCHES)
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("names", nargs="*", metavar="bench",
+                    help="benches to run (default: all; under --snapshot: "
+                         f"{' '.join(SNAPSHOT_DEFAULT)})")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="record per-bench BENCH_<name>.json snapshots")
+    ap.add_argument("--snapshot-dir", default=REPO_ROOT,
+                    help="where snapshots are written (default: repo root)")
+    args = ap.parse_args(argv)
+    unknown = [n for n in args.names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench(es): {', '.join(unknown)} "
+                 f"(choose from: {', '.join(BENCHES)})")
+    names = args.names or (SNAPSHOT_DEFAULT if args.snapshot
+                           else list(BENCHES))
+    env = None
+    if args.snapshot:
+        os.makedirs(args.snapshot_dir, exist_ok=True)
+        env = env_fingerprint()
     failures = []
     for name in names:
         t0 = time.time()
-        print(f"=== {name} ({BENCHES[name].__name__}) ===", flush=True)
-        ok = BENCHES[name].run()
+        print(f"=== {name} ({BENCHES[name].label}) ===", flush=True)
+        if args.snapshot:
+            common.begin_snapshot()
+            try:
+                ok = BENCHES[name].runner()
+            finally:
+                metrics = common.end_snapshot()
+            path = os.path.join(args.snapshot_dir, f"BENCH_{name}.json")
+            write_snapshot(path, name, ok, env, metrics)
+            print(f"    snapshot: {len(metrics)} metrics -> {path}",
+                  flush=True)
+        else:
+            ok = BENCHES[name].runner()
         print(f"--- {name}: {'PASS' if ok else 'FAIL'} "
               f"({time.time()-t0:.1f}s)\n", flush=True)
         if not ok:
             failures.append(name)
+    if args.snapshot and roofline_snapshot(args.snapshot_dir, env):
+        print("    snapshot: roofline fractions -> "
+              f"{os.path.join(args.snapshot_dir, 'BENCH_roofline.json')}",
+              flush=True)
     print(f"== benchmarks: {len(names) - len(failures)}/{len(names)} pass ==")
     if failures:
         print("failed:", ", ".join(failures))

@@ -20,7 +20,6 @@ interpreted off-TPU.
 from __future__ import annotations
 
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import get_model
-from .common import emit
+from .common import emit, record, record_timed, timed
 
 ARCH = "qwen3-0.6b"
 
@@ -39,17 +38,24 @@ def _requests(cfg, n, seed=0, mixed=True):
     return [rng.integers(0, cfg.vocab_size, int(l)) for l in lens]
 
 
-def _engine_run(cfg, params, prompts, max_slots, max_tokens=8):
+def _engine_run(cfg, params, prompts, max_slots, max_tokens=8,
+                reps=1, warmup=0):
+    """Run a fresh engine over ``prompts``; per-rep wall times come from
+    the blocking timer (greedy + per-request seeds, so every rep yields
+    identical tokens)."""
     from repro.serving import Engine, SamplingParams
-    engine = Engine(cfg, params, max_slots=max_slots,
-                    num_pages=1 + 8 * len(prompts), page_size=8)
-    for i, p in enumerate(prompts):
-        engine.add_request(p, SamplingParams(max_tokens=max_tokens, seed=i))
-    t0 = time.time()
-    out = engine.run()
-    dt = time.time() - t0
+
+    def once():
+        engine = Engine(cfg, params, max_slots=max_slots,
+                        num_pages=1 + 8 * len(prompts), page_size=8)
+        for i, p in enumerate(prompts):
+            engine.add_request(p, SamplingParams(max_tokens=max_tokens,
+                                                 seed=i))
+        return engine.run(), engine
+
+    (out, engine), dt, samples = timed(once, reps=reps, warmup=warmup)
     toks = sum(len(v) for v in out.values())
-    return out, toks, dt, engine
+    return out, toks, dt, samples, engine
 
 
 def run(smoke: bool = False) -> bool:
@@ -69,10 +75,13 @@ def run(smoke: bool = False) -> bool:
     parity = bool(np.array_equal(dense, eng))
     ok &= parity
 
-    # mixed-length continuous batching vs per-request dense
+    # mixed-length continuous batching vs per-request dense; the timed
+    # reps (post-compile) double as the smoke throughput metric
     mixed = _requests(cfg, 3, seed=1)
-    out, _, _, engine = _engine_run(cfg, params, mixed, max_slots=2,
-                                    max_tokens=gen)
+    out, toks, _, samples, engine = _engine_run(
+        cfg, params, mixed, max_slots=2, max_tokens=gen, reps=2, warmup=1)
+    record_timed("serving/smoke/tok_per_s", samples, unit="tok/s",
+                 higher_is_better=True, transform=lambda s: toks / s)
     mixed_parity = True
     for rid, p in zip(sorted(out), mixed):
         ref = np.asarray(generate_dense(
@@ -100,6 +109,16 @@ def run(smoke: bool = False) -> bool:
     kernel_ok = kerr < 5e-2
     ok &= kernel_ok
 
+    record("serving/parity/dense", float(parity))
+    record("serving/parity/mixed", float(mixed_parity))
+    # deterministic in-process, but XLA-CPU reductions vary a little
+    # across machines: 50% self-noise keeps the gate on >2.5x blowups
+    record("serving/kernel/max_abs_err", kerr, unit="abs",
+           higher_is_better=False, noise=0.5 * kerr)
+    record("serving/mixed/prefills", engine.n_prefills, unit="count",
+           higher_is_better=False)
+    record("serving/mixed/decode_steps", engine.n_decode_steps,
+           unit="count", higher_is_better=False)
     rows = [["greedy engine == dense generate (4x8+8)", str(parity)],
             ["mixed-length engine == per-request dense", str(mixed_parity)],
             [f"paged kernel vs gather fallback (max|d|={kerr:.1e})",
@@ -118,20 +137,28 @@ def run(smoke: bool = False) -> bool:
     prompts = _requests(cfg, n_req, seed=3)
     rows = []
     for slots in (1, 2, 4, 8):
-        _, toks, dt, engine = _engine_run(cfg, params, prompts,
-                                          max_slots=slots, max_tokens=gen)
+        _, toks, dt, samples, engine = _engine_run(
+            cfg, params, prompts, max_slots=slots, max_tokens=gen,
+            reps=2, warmup=1)
         rows.append([slots, toks, f"{dt:.2f}s", f"{toks/dt:.1f}",
                      engine.n_prefills, engine.n_decode_steps])
+        record_timed(f"serving/slots{slots}/tok_per_s", samples,
+                     unit="tok/s", higher_is_better=True,
+                     transform=lambda s: toks / s)
     # dense baseline: same-length batch (the only thing it can do)
     prompts_dense = jnp.asarray(
         np.stack([p[:4] for p in prompts]), jnp.int32)
-    t0 = time.time()
-    generate_dense(cfg, params, prompts_dense, gen)
-    dt = time.time() - t0
+    _, dt, samples = timed(
+        lambda: generate_dense(cfg, params, prompts_dense, gen),
+        reps=2, warmup=1)
     rows.append(["dense-XLA batch", n_req * gen, f"{dt:.2f}s",
                  f"{n_req*gen/dt:.1f}", 1, gen])
+    record_timed("serving/dense_batch/tok_per_s", samples, unit="tok/s",
+                 higher_is_better=True,
+                 transform=lambda s: n_req * gen / s)
     emit("serving_throughput",
-         "Engine tok/s vs in-flight slots (CPU shape run; incl. compile)",
+         "Engine tok/s vs in-flight slots (CPU shape run; post-compile, "
+         "blocking reps)",
          ["slots", "tokens", "wall", "tok/s", "prefills", "decode steps"],
          rows,
          "decode steps shrink as slots grow: continuous batching advances "

@@ -6,7 +6,7 @@ Note: exact enumeration reproduces Table 1's 22.75 (RN) and Table 2's ROWS
 (which sum to 22.25) — the paper's *text* says 22.5 for RZ, which is
 inconsistent with its own Table 2; we record the discrepancy."""
 from repro.core.theory import expected_mantissa_length
-from .common import emit
+from .common import emit, record
 
 
 def run():
@@ -16,6 +16,8 @@ def run():
         for mode in ["rn", "rz"]:
             e = expected_mantissa_length(mant, mode)
             vals[(fmt_name, mode)] = e
+            record(f"table12/{fmt_name}/{mode}/expected_bits", e,
+                   unit="bits")
             rows.append([fmt_name, mode.upper(), f"{e:.4f}"])
     ok = (abs(vals[("fp16", "rn")] - 22.75) < 1e-9
           and abs(vals[("fp16", "rz")] - 22.25) < 1e-9

@@ -91,6 +91,26 @@ def dryrun_table(recs):
     return rows
 
 
+def snapshot_metrics(recs):
+    """Dry-run roofline fractions as BENCH-snapshot metrics (the schema
+    ``benchmarks/compare.py`` gates on): per ok cell, the effective-peak
+    fraction of the dominant roofline term and the useful-FLOPs ratio —
+    both analytic (derived from partitioned HLO, not wall clock), both
+    higher-is-better."""
+    out = {}
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        out[key + "/fraction"] = {
+            "value": float(r["roofline_fraction"]), "unit": "frac",
+            "kind": "analytic", "higher_is_better": True, "noise": 0.0}
+        out[key + "/useful_flops"] = {
+            "value": float(r["useful_flops_ratio"]), "unit": "frac",
+            "kind": "analytic", "higher_is_better": True, "noise": 0.0}
+    return out
+
+
 def md_table(headers, rows):
     out = ["| " + " | ".join(headers) + " |",
            "|" + "|".join("---" for _ in headers) + "|"]
@@ -99,11 +119,11 @@ def md_table(headers, rows):
     return "\n".join(out)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     recs = load(args.dir)
     ok = sum(r["status"] == "ok" for r in recs)
     skip = sum(r["status"] == "skip" for r in recs)

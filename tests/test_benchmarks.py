@@ -1,0 +1,300 @@
+"""Bench-harness tests: the blocking timer contract, the snapshot
+schema round-trip, the compare.py regression matrix, the snapshot CLI
+against the committed baselines (the acceptance pin), and smoke-mode
+determinism for every registered bench.
+
+Markidis et al. (PAPERS.md) show how easily Tensor-Core speedups
+evaporate under measurement error — hence the harness itself is under
+test, starting with the fact that an unblocked wall-clock delta times
+jax's async *enqueue*, not the compute.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks import common, compare, run
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def bench_out(tmp_path, monkeypatch):
+    """Redirect display-JSON artifacts (and blocksweep's autotune cache)
+    away from experiments/bench."""
+    out = tmp_path / "bench"
+    monkeypatch.setattr(common, "OUT_DIR", str(out))
+    return out
+
+
+# ------------------------------------------------------------- timed()
+
+class _FakeAsync:
+    """Stands in for a jax array: counts block_until_ready calls."""
+
+    def __init__(self, counter):
+        self.counter = counter
+
+    def block_until_ready(self):
+        self.counter["blocks"] += 1
+
+
+def test_timed_blocks_every_rep_including_warmup():
+    counter = {"blocks": 0, "calls": 0}
+
+    def fn():
+        counter["calls"] += 1
+        # pytree output: blocking must reach nested async leaves
+        return {"out": _FakeAsync(counter), "aux": 42}
+
+    out, mean, samples = common.timed(fn, reps=4, warmup=2)
+    assert counter["calls"] == 6
+    assert counter["blocks"] == 6          # warmup blocks too
+    assert len(samples) == 4
+    assert mean == pytest.approx(sum(samples) / 4)
+    assert all(s >= 0 for s in samples)
+    assert out["aux"] == 42
+
+
+def test_timed_zero_warmup_still_returns_output():
+    out, _, samples = common.timed(lambda: 7, reps=2, warmup=0)
+    assert out == 7 and len(samples) == 2
+
+
+def test_record_timed_noise_tracks_sample_jitter(bench_out):
+    common.begin_snapshot()
+    common.record_timed("m/steady", [1.0, 1.0, 1.0])
+    common.record_timed("m/jittery", [1.0, 2.0, 3.0],
+                        higher_is_better=True,
+                        transform=lambda s: 10.0 / s)
+    m = common.end_snapshot()
+    assert m["m/steady"]["noise"] == 0.0
+    assert m["m/steady"]["kind"] == "measured"
+    assert m["m/jittery"]["value"] == pytest.approx(5.0)   # 10 / mean(2)
+    # relative sample jitter (std/mean = 0.5) carried through transform
+    assert m["m/jittery"]["noise"] == pytest.approx(2.5)
+
+
+def test_record_rejects_non_finite_values():
+    common.begin_snapshot()
+    try:
+        with pytest.raises(ValueError, match="non-finite"):
+            common.record("bad", float("inf"))
+        with pytest.raises(ValueError, match="non-finite"):
+            common.record("bad", float("nan"))
+    finally:
+        assert common.end_snapshot() == {}
+
+
+def test_record_is_noop_outside_snapshot_mode():
+    assert not common.snapshot_active()
+    common.record("orphan", 1.0)           # must not raise, must not leak
+    common.begin_snapshot()
+    common.record("kept", 2.0)
+    m = common.end_snapshot()
+    assert m == {"kept": {"value": 2.0, "unit": "", "kind": "analytic",
+                          "higher_is_better": True, "noise": 0.0}}
+    assert not common.snapshot_active()
+
+
+# -------------------------------------------------- schema round-trip
+
+def test_snapshot_schema_roundtrip(tmp_path):
+    common.begin_snapshot()
+    common.record("a/tflops", 51.0, unit="TF/s")
+    common.record("a/latency", 0.2, unit="s", kind="measured",
+                  higher_is_better=False, noise=0.01)
+    metrics = common.end_snapshot()
+    env = {"backend": "cpu", "device_count": 1, "policy": "fp32",
+           "git_sha": "deadbeef", "jax_version": "0", "noise_rel": 0.1}
+    path = tmp_path / "BENCH_a.json"
+    run.write_snapshot(str(path), "a", True, env, metrics)
+    snap = compare.load_snapshot(str(path))
+    assert snap["schema"] == common.SCHEMA_VERSION
+    assert snap["bench"] == "a" and snap["ok"] is True
+    assert snap["env"] == env
+    assert snap["metrics"] == metrics
+
+
+def test_load_snapshot_rejects_non_snapshot_json(tmp_path):
+    p = tmp_path / "BENCH_bad.json"
+    p.write_text('{"title": "a display table, not a snapshot"}')
+    with pytest.raises(ValueError, match="not a BENCH snapshot"):
+        compare.load_snapshot(str(p))
+
+
+def test_env_fingerprint_fields():
+    env = run.env_fingerprint()
+    assert set(env) == {"backend", "device_count", "policy",
+                        "jax_version", "git_sha", "noise_rel"}
+    assert env["device_count"] >= 1
+    assert env["noise_rel"] >= 0.0
+
+
+# ---------------------------------------------------- compare() matrix
+
+def _metric(value, *, kind="analytic", noise=0.0, higher=True):
+    return {"value": value, "unit": "", "kind": kind,
+            "higher_is_better": higher, "noise": noise}
+
+
+def _one(base, cand, **kw):
+    (f,) = compare.compare_metrics({"m": base}, {"m": cand}, **kw)
+    return f
+
+
+def test_compare_improvement_passes():
+    f = _one(_metric(10.0), _metric(20.0))
+    assert f["status"] == "improved"
+
+
+def test_compare_regression_beyond_noise_fails():
+    f = _one(_metric(10.0), _metric(9.0))   # -10% vs 2% floor
+    assert f["status"] == "regression"
+
+
+def test_compare_within_noise_passes():
+    assert _one(_metric(10.0), _metric(9.9))["status"] == "ok"
+    # wide recorded noise band absorbs a big delta: 3 sigma * 1.0 = 3.0
+    f = _one(_metric(10.0, noise=1.0), _metric(8.0, noise=1.0))
+    assert f["status"] == "ok"
+
+
+def test_compare_lower_is_better_flips_direction():
+    worse = _one(_metric(1.0, higher=False), _metric(2.0, higher=False))
+    assert worse["status"] == "regression"
+    better = _one(_metric(2.0, higher=False), _metric(1.0, higher=False))
+    assert better["status"] == "improved"
+
+
+def test_compare_measured_floor_is_wider():
+    base = _metric(10.0, kind="measured")
+    assert _one(base, _metric(6.0, kind="measured"))["status"] == "ok"
+    f = _one(base, _metric(4.0, kind="measured"))  # -60% > 50% floor
+    assert f["status"] == "regression"
+
+
+def test_compare_measured_ungated_across_backends():
+    base = _metric(10.0, kind="measured")
+    f = _one(base, _metric(1.0, kind="measured"), gate_measured=False)
+    assert f["status"] == "ungated"
+    # analytic metrics still gate with measured gating off
+    f = compare.compare_metrics({"a": _metric(10.0)}, {"a": _metric(1.0)},
+                                gate_measured=False)[0]
+    assert f["status"] == "regression"
+
+
+def test_compare_metric_added_and_removed_are_non_gating():
+    fs = compare.compare_metrics(
+        {"old": _metric(1.0), "both": _metric(1.0)},
+        {"new": _metric(1.0), "both": _metric(1.0)})
+    by = {f["metric"]: f["status"] for f in fs}
+    assert by == {"old": "removed", "new": "added", "both": "ok"}
+    assert all(s in compare.NON_GATING for s in by.values())
+
+
+def test_compare_snapshots_gates_bench_claim_flip():
+    env = {"backend": "cpu"}
+    base = {"bench": "x", "ok": True, "env": env,
+            "metrics": {"m": _metric(1.0)}}
+    cand = {"bench": "x", "ok": False, "env": env,
+            "metrics": {"m": _metric(1.0)}}
+    passed, findings = compare.compare_snapshots(base, cand)
+    assert not passed
+    assert findings[0]["metric"] == "<bench claim>"
+    passed, _ = compare.compare_snapshots(base, dict(cand, ok=True))
+    assert passed
+
+
+def test_compare_snapshots_backend_mismatch_relaxes_measured():
+    base = {"bench": "x", "ok": True, "env": {"backend": "tpu"},
+            "metrics": {"m": _metric(10.0, kind="measured")}}
+    cand = {"bench": "x", "ok": True, "env": {"backend": "cpu"},
+            "metrics": {"m": _metric(1.0, kind="measured")}}
+    passed, findings = compare.compare_snapshots(base, cand)
+    assert passed and findings[0]["status"] == "ungated"
+
+
+def test_compare_cli_missing_baseline_is_clean_first_run(tmp_path,
+                                                         capsys):
+    cand = tmp_path / "cand"
+    cand.mkdir()
+    run.write_snapshot(str(cand / "BENCH_x.json"), "x", True,
+                       {"backend": "cpu"}, {"m": _metric(1.0)})
+    empty_base = tmp_path / "base"
+    empty_base.mkdir()
+    rc = compare.main(["--baseline", str(empty_base),
+                       "--candidate", str(cand)])
+    assert rc == 0
+    assert "first-run pass" in capsys.readouterr().out
+
+
+def test_compare_cli_empty_candidate_dir_errors(tmp_path):
+    assert compare.main(["--baseline", str(tmp_path),
+                         "--candidate", str(tmp_path)]) == 2
+
+
+# ------------------------- acceptance pin: CLI + committed baselines
+
+def test_snapshot_cli_matches_committed_baseline_and_gates_perturbation(
+        tmp_path, bench_out, capsys):
+    """`run --snapshot fig14` must agree with the committed
+    BENCH_fig14.json (exit 0) and a perturbed metric must flip the exit
+    code — the regression gate demonstrably fires."""
+    snap_dir = tmp_path / "snaps"
+    assert run.main(["--snapshot", "--snapshot-dir", str(snap_dir),
+                     "fig14"]) == 0
+    path = snap_dir / "BENCH_fig14.json"
+    assert path.exists()
+    assert os.path.exists(os.path.join(REPO_ROOT, "BENCH_fig14.json")), \
+        "committed baseline missing from repo root"
+    assert compare.main(["--baseline", REPO_ROOT,
+                         "--candidate", str(snap_dir)]) == 0
+
+    snap = json.loads(path.read_text())
+    name = "gemm/4096/tcec_bf16x6/fused+heur/tflops"
+    snap["metrics"][name]["value"] *= 0.5      # way beyond the 2% floor
+    path.write_text(json.dumps(snap))
+    assert compare.main(["--baseline", REPO_ROOT,
+                         "--candidate", str(snap_dir)]) == 1
+    assert "regression" in capsys.readouterr().out
+
+
+def test_snapshot_default_set_covers_throughput_benches():
+    assert run.SNAPSHOT_DEFAULT == ["fig14", "fig14attn", "blocksweep",
+                                    "serving"]
+    for name in run.SNAPSHOT_DEFAULT:
+        assert name in run.BENCHES
+        assert os.path.exists(
+            os.path.join(REPO_ROOT, f"BENCH_{name}.json")), \
+            f"BENCH_{name}.json baseline not committed"
+
+
+# ------------------------------------------------ smoke determinism
+
+def _snapshot_run(name):
+    common.begin_snapshot()
+    try:
+        ok = run.BENCHES[name].runner()
+    finally:
+        metrics = common.end_snapshot()
+    return ok, metrics
+
+
+def _analytic(metrics):
+    return {k: v for k, v in metrics.items() if v["kind"] == "analytic"}
+
+
+@pytest.mark.parametrize("name", sorted(run.BENCHES))
+def test_bench_smoke_deterministic(name, bench_out):
+    """Every registered bench (all pinned-seed, smoke-form entries) must
+    pass twice in-process with bit-identical analytic snapshot metrics —
+    bench drift can't hide behind flakiness.  Wall-clock (``measured``)
+    metrics are exempt by construction."""
+    ok1, m1 = _snapshot_run(name)
+    ok2, m2 = _snapshot_run(name)
+    assert bool(ok1) and bool(ok2)     # some benches return np.bool_
+    assert m1, f"{name} records no snapshot metrics"
+    assert _analytic(m1) == _analytic(m2)
+    for key, m in m1.items():
+        assert m["kind"] in ("analytic", "measured"), key

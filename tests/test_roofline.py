@@ -1,0 +1,123 @@
+"""Direct coverage for repro.launch.roofline — load/fmt_bytes/table
+generation/snapshot metrics from a fixture experiments/dryrun record
+set (it was the only launch/ module with no tests of its own)."""
+import json
+
+import pytest
+
+from repro.launch import roofline
+
+
+def _ok_rec(arch="qwen3-0.6b", shape="train_4k", mesh="16x16",
+            compute=0.5, memory=0.25, collective=0.125):
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get).replace("_s", "")
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "status": "ok",
+        "kind": "train", "compile_s": 12.0,
+        "roofline": terms, "bottleneck": dom,
+        "roofline_fraction": compute / max(terms.values()),
+        "useful_flops_ratio": 0.333,
+        "memory": {"argument_size_in_bytes": 2 * 2**30,
+                   "temp_size_in_bytes": 5 * 2**30},
+        "collectives": {"per_device_bytes": 3.2e9,
+                        "counts": {"all-reduce": 4, "all-gather": 0}},
+    }
+
+
+@pytest.fixture
+def dryrun_dir(tmp_path):
+    recs = [
+        _ok_rec(),
+        _ok_rec(shape="prefill_32k", compute=0.1, memory=0.8),
+        {"arch": "qwen3-0.6b", "shape": "long_500k", "mesh": "16x16",
+         "status": "skip", "reason": "full attention @500k"},
+        {"arch": "zamba2-1.2b", "shape": "train_4k", "mesh": "16x16",
+         "status": "error", "error": "OOM during lowering" + "x" * 60},
+        _ok_rec(mesh="2x16x16"),   # other mesh: dryrun table only
+    ]
+    for i, r in enumerate(recs):
+        (tmp_path / f"cell{i}.json").write_text(json.dumps(r))
+    return tmp_path
+
+
+def test_load_reads_sorted_records(dryrun_dir):
+    recs = roofline.load(str(dryrun_dir))
+    assert len(recs) == 5
+    assert [r["status"] for r in recs] == ["ok", "ok", "skip", "error",
+                                          "ok"]
+    assert roofline.load(str(dryrun_dir / "nope")) == []
+
+
+def test_fmt_bytes_thresholds():
+    assert roofline.fmt_bytes(1.5e12) == "1.50T"
+    assert roofline.fmt_bytes(2.5e9) == "2.50G"
+    assert roofline.fmt_bytes(3.0e6) == "3.0M"
+    assert roofline.fmt_bytes(0) == "0.0M"
+
+
+def test_roofline_table_orders_shapes_and_marks_statuses(dryrun_dir):
+    rows = roofline.roofline_table(roofline.load(str(dryrun_dir)),
+                                   mesh="16x16")
+    by_arch = [(r[0], r[1]) for r in rows]
+    # SHAPE_ORDER drives row order within an arch; 2x16x16 cell excluded
+    assert by_arch == [("qwen3-0.6b", "train_4k"),
+                       ("qwen3-0.6b", "prefill_32k"),
+                       ("qwen3-0.6b", "long_500k"),
+                       ("zamba2-1.2b", "train_4k")]
+    ok_row = rows[0]
+    assert ok_row[2:7] == ["0.500", "0.250", "0.125", "compute", "1.00"]
+    assert roofline.IMPROVE_HINTS["compute"][:20] in ok_row[8] + " " * 60
+    mem_row = rows[1]
+    assert mem_row[5] == "memory" and mem_row[6] == "0.12"
+    assert "SKIP" in rows[2][2]
+    assert rows[3][2] == "ERROR"
+    assert rows[3][8] == ("OOM during lowering" + "x" * 60)[:40]
+
+
+def test_dryrun_table_covers_both_meshes_and_errors(dryrun_dir):
+    rows = roofline.dryrun_table(roofline.load(str(dryrun_dir)))
+    assert len(rows) == 5
+    ok_row = next(r for r in rows if r[0] == "qwen3-0.6b"
+                  and r[2] == "16x16" and r[1] == "train_4k")
+    assert ok_row[4] == "12s"
+    assert ok_row[5] == "2.00" and ok_row[6] == "5.0"       # GiB cols
+    assert ok_row[7] == "3.20G"
+    assert ok_row[8] == "all-reduce:4"                      # zero dropped
+    err_row = next(r for r in rows if r[0] == "zamba2-1.2b")
+    assert err_row[3] == "error" and err_row[8].startswith("OOM")
+
+
+def test_md_table_shape():
+    txt = roofline.md_table(["a", "b"], [[1, 2], [3, 4]])
+    lines = txt.splitlines()
+    assert lines[0] == "| a | b |"
+    assert lines[1] == "|---|---|"
+    assert lines[2] == "| 1 | 2 |" and len(lines) == 4
+
+
+def test_snapshot_metrics_ok_cells_only(dryrun_dir):
+    metrics = roofline.snapshot_metrics(roofline.load(str(dryrun_dir)))
+    assert set(metrics) == {
+        "roofline/qwen3-0.6b/train_4k/16x16/fraction",
+        "roofline/qwen3-0.6b/train_4k/16x16/useful_flops",
+        "roofline/qwen3-0.6b/prefill_32k/16x16/fraction",
+        "roofline/qwen3-0.6b/prefill_32k/16x16/useful_flops",
+        "roofline/qwen3-0.6b/train_4k/2x16x16/fraction",
+        "roofline/qwen3-0.6b/train_4k/2x16x16/useful_flops",
+    }
+    m = metrics["roofline/qwen3-0.6b/prefill_32k/16x16/fraction"]
+    assert m["value"] == pytest.approx(0.125)
+    assert m["kind"] == "analytic" and m["higher_is_better"]
+    assert roofline.snapshot_metrics([]) == {}
+
+
+def test_main_writes_report(dryrun_dir, tmp_path, capsys):
+    out = tmp_path / "report.md"
+    roofline.main(["--dir", str(dryrun_dir), "--out", str(out)])
+    txt = out.read_text()
+    assert "3 ok / 1 skip / 1 error of 5 cells" in txt
+    assert "§Roofline" in txt and "§Dry-run" in txt
+    assert "| qwen3-0.6b | train_4k |" in txt
+    assert capsys.readouterr().out.strip() == txt.strip()
