@@ -119,6 +119,19 @@ def run(smoke: bool = False) -> bool:
            higher_is_better=False)
     record("serving/mixed/decode_steps", engine.n_decode_steps,
            unit="count", higher_is_better=False)
+    # resilience counters: all zero on a fault-free run, so a change that
+    # starts tripping recovery paths in normal operation moves a gated
+    # metric (docs/robustness.md)
+    stats = engine.stats()
+    for key in ("guard_trips", "fallback_reruns", "numerics_errors",
+                "rejections", "overloads", "timeouts", "length_caps",
+                "prefill_faults", "preemptions", "parks"):
+        record(f"serving/resilience/{key}", float(stats[key]),
+               unit="count", higher_is_better=False)
+    for key in ("failures", "declined"):
+        record(f"serving/resilience/breaker_{key}",
+               float(stats["breaker"][key]), unit="count",
+               higher_is_better=False)
     rows = [["greedy engine == dense generate (4x8+8)", str(parity)],
             ["mixed-length engine == per-request dense", str(mixed_parity)],
             [f"paged kernel vs gather fallback (max|d|={kerr:.1e})",

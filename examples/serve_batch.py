@@ -47,7 +47,7 @@ print(f"engine: {len(requests)} mixed-length requests on "
 for (prompt, sp), rid in zip(requests, rids):
     mode = "greedy" if sp.greedy else f"T={sp.temperature}"
     print(f"  req {rid}: prompt {len(prompt):2d} tok, {mode:8s} "
-          f"-> {out[rid][:8]}")
+          f"[{out[rid].finish_reason}] -> {out[rid][:8]}")
 
 # --- back-compat generate(): SSM family, dense-loop fallback ------------
 cfg = get_smoke_config("mamba2-130m")

@@ -27,7 +27,7 @@ __all__ = [
     "numerics", "NumericsConfig", "matmul", "einsum", "attention",
     "Policy", "POLICIES", "get_policy", "pdot", "policy_mm", "policy_bmm",
     "tcec_matmul", "tcec_attention", "tcec_paged_attention", "tuning",
-    "shmap", "VMEM_BUDGET", "vmem_bytes",
+    "shmap", "VMEM_BUDGET", "vmem_bytes", "faults", "guard",
 ]
 
 # Heavier subsystems load lazily (PEP 562): `import repro` must stay cheap
@@ -45,6 +45,8 @@ _LAZY = {
     "tcec_paged_attention": ("repro.kernels.tcec_paged_attention",
                              "tcec_paged_attention"),
     "tuning": ("repro.kernels.tuning", None),
+    "faults": ("repro.faults", None),
+    "guard": ("repro.kernels.guard", None),
     "shmap": ("repro.kernels.shmap", None),
     "VMEM_BUDGET": ("repro.kernels.tcec_matmul", "VMEM_BUDGET"),
     "vmem_bytes": ("repro.kernels.tcec_matmul", "vmem_bytes"),

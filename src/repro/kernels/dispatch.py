@@ -59,6 +59,37 @@ def _cfg(cfg) -> numerics.NumericsConfig:
     return cfg if cfg is not None else numerics.active()
 
 
+def _guarded(kernel: str, ident: tuple, cfg, thunk, site: str):
+    """Run a fused-kernel thunk behind the circuit breaker.
+
+    With the ``guard`` knob on (default), a kernel failure for this
+    ``(backend, kernel, *ident)`` key is caught and converted to an XLA
+    fallback (return None), and repeated failures quarantine the key for
+    a cooldown (see :mod:`repro.kernels.guard`).  With the knob off the
+    error propagates — the debugging posture.  ``site`` is the
+    :mod:`repro.faults` injection point exercised by the chaos battery.
+
+    NB this runs at trace time: a jitted caller consults the breaker
+    once per (function, shape, config-epoch) trace, not per execution.
+    """
+    from repro import faults
+    if not cfg.guard:
+        faults.raise_if(site)
+        return thunk()
+    from . import guard
+    key = guard.make_key(kernel, ident)
+    if not guard.allow(key):
+        return None
+    try:
+        faults.raise_if(site)
+        out = thunk()
+    except Exception as exc:       # noqa: BLE001 — fallback exists by design
+        guard.failure(key, exc)
+        return None
+    guard.success(key)
+    return out
+
+
 # ----------------------------------------------------------- eligibility
 
 def eligible_policy(policy: PrecisionPolicy) -> bool:
@@ -160,17 +191,24 @@ def maybe_dispatch(a, b, policy: PrecisionPolicy, dims, cfg=None):
     from . import shmap
     mesh, plan = _mesh_plan_or_decline(
         lambda m: shmap.matmul_plan(at.shape, bt.shape, m), cfg)
-    if mesh is not None:
-        if plan == "decline":         # decide() screens this; stay graceful
-            return None
-        return shmap.sharded_matmul(at, bt, policy=policy.name, mesh=mesh,
-                                    cfg=cfg, plan=plan)
     M, K = at.shape[-2], at.shape[-1]
     N = bt.shape[-1]
     B = at.shape[0] if at.ndim == 3 else 1
-    block = tuned_block(M, N, K, policy.name, batch=B, cfg=cfg)
-    return ops.tcec_matmul(at, bt, policy=policy.name, block=block,
-                           interpret=cfg.interpret, cfg=cfg)
+    ident = (policy.name,) + tuning.shape_bucket(B, M, N, K)
+    if mesh is not None:
+        if plan == "decline":         # decide() screens this; stay graceful
+            return None
+        return _guarded(
+            "matmul", ident, cfg,
+            lambda: shmap.sharded_matmul(at, bt, policy=policy.name,
+                                         mesh=mesh, cfg=cfg, plan=plan),
+            "kernel.matmul")
+
+    def _run():
+        block = tuned_block(M, N, K, policy.name, batch=B, cfg=cfg)
+        return ops.tcec_matmul(at, bt, policy=policy.name, block=block,
+                               interpret=cfg.interpret, cfg=cfg)
+    return _guarded("matmul", ident, cfg, _run, "kernel.matmul")
 
 
 # ------------------------------------------------- attention dispatch
@@ -242,24 +280,32 @@ def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
     from . import shmap
     mesh, plan = _mesh_plan_or_decline(
         lambda m: shmap.attention_plan(q.shape, k.shape, m), cfg)
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    ident = (pol.name, B, Hkv, H // Hkv,
+             tuning._round_up(S, 128), tuning._round_up(T, 128))
     if mesh is not None:
         if plan == "decline":         # eligibility screens this; graceful
             return None
-        return shmap.sharded_attention(q, k, v, q_pos, k_pos,
-                                       policy=pol.name, causal=causal,
-                                       window=window, softcap=softcap,
-                                       mesh=mesh, cfg=cfg, plan=plan)
-    from .tcec_attention import tcec_attention
-    B, S, H, hd = q.shape
-    T, Hkv = k.shape[1], k.shape[2]
-    block = cfg.attn_block
-    if block is None:
-        block = tuning.get_attention_block(B, Hkv, H // Hkv, S, T, hd,
-                                           v.shape[3], pol.name,
-                                           causal=causal, cfg=cfg)
-    return tcec_attention(q, k, v, q_pos, k_pos, policy=pol.name,
-                          causal=causal, window=window, softcap=softcap,
-                          block=block, interpret=cfg.interpret)
+        return _guarded(
+            "attention", ident, cfg,
+            lambda: shmap.sharded_attention(q, k, v, q_pos, k_pos,
+                                            policy=pol.name, causal=causal,
+                                            window=window, softcap=softcap,
+                                            mesh=mesh, cfg=cfg, plan=plan),
+            "kernel.attention")
+
+    def _run():
+        from .tcec_attention import tcec_attention
+        block = cfg.attn_block
+        if block is None:
+            block = tuning.get_attention_block(B, Hkv, H // Hkv, S, T, hd,
+                                               v.shape[3], pol.name,
+                                               causal=causal, cfg=cfg)
+        return tcec_attention(q, k, v, q_pos, k_pos, policy=pol.name,
+                              causal=causal, window=window, softcap=softcap,
+                              block=block, interpret=cfg.interpret)
+    return _guarded("attention", ident, cfg, _run, "kernel.attention")
 
 
 # -------------------------------------------- paged decode-attention
@@ -335,24 +381,32 @@ def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
     from . import shmap
     mesh, plan = _mesh_plan_or_decline(
         lambda m: shmap.paged_plan(q.shape, k_pages.shape, m), cfg)
+    B, H, hd = q.shape
+    NP, ps, Hkv, _ = k_pages.shape
+    ident = (pol.name, B, Hkv, H // Hkv, block_tables.shape[1], ps)
     if mesh is not None:
         if plan == "decline":         # eligibility screens this; graceful
             return None
-        return shmap.sharded_paged_attention(
-            q, k_pages, v_pages, block_tables, lengths, policy=pol.name,
-            window=window, softcap=softcap, mesh=mesh, cfg=cfg, plan=plan)
-    from .tcec_paged_attention import tcec_paged_attention
-    B, H, hd = q.shape
-    NP, ps, Hkv, _ = k_pages.shape
-    g = cfg.paged_block
-    if g is None:
-        g = tuning.get_paged_block(B, Hkv, H // Hkv, block_tables.shape[1],
-                                   ps, hd, v_pages.shape[3], pol.name,
-                                   cfg=cfg)
-    return tcec_paged_attention(q, k_pages, v_pages, block_tables, lengths,
-                                policy=pol.name, window=window,
-                                softcap=softcap, pages_per_step=g,
-                                interpret=cfg.interpret)
+        return _guarded(
+            "paged_attention", ident, cfg,
+            lambda: shmap.sharded_paged_attention(
+                q, k_pages, v_pages, block_tables, lengths, policy=pol.name,
+                window=window, softcap=softcap, mesh=mesh, cfg=cfg,
+                plan=plan),
+            "kernel.paged")
+
+    def _run():
+        from .tcec_paged_attention import tcec_paged_attention
+        g = cfg.paged_block
+        if g is None:
+            g = tuning.get_paged_block(B, Hkv, H // Hkv,
+                                       block_tables.shape[1], ps, hd,
+                                       v_pages.shape[3], pol.name, cfg=cfg)
+        return tcec_paged_attention(q, k_pages, v_pages, block_tables,
+                                    lengths, policy=pol.name, window=window,
+                                    softcap=softcap, pages_per_step=g,
+                                    interpret=cfg.interpret)
+    return _guarded("paged_attention", ident, cfg, _run, "kernel.paged")
 
 
 # ------------------------------------------------- epilogue-fusion hook

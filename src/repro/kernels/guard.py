@@ -1,0 +1,203 @@
+"""kernels.guard — a circuit breaker for fused-kernel dispatch.
+
+The dispatch layer (:mod:`repro.kernels.dispatch`) always has a correct
+answer available: the XLA term-expansion fallback computes the same
+bit-specified result as the fused Pallas kernels, just slower.  That
+makes kernel failures — a Mosaic lowering bug on an odd shape, a backend
+regression, an interpret-mode edge case — *recoverable by construction*:
+catch, fall back, keep serving.  What must NOT happen is paying the
+failure cost (a raised exception deep inside a jit trace, possibly
+seconds of compile time) on every single call for a shape that is known
+to be broken.
+
+Hence a classic circuit breaker, keyed by ``(backend, kernel,
+shape-bucket...)`` so one pathological shape doesn't quarantine the
+kernel wholesale:
+
+* **closed** (healthy) — dispatch proceeds; consecutive failures are
+  counted.
+* **open** (quarantined) — after ``threshold`` consecutive failures the
+  key is quarantined: :func:`allow` declines for ``cooldown`` subsequent
+  calls, which dispatch turns into immediate XLA fallback (no retry
+  cost).
+* **half-open** (probing) — after the cooldown expires, exactly one call
+  is allowed through as a probe.  Success closes the breaker; failure
+  reopens it for another cooldown.
+
+The cooldown is counted in *calls*, not wall-clock time — breaker
+transitions are then a pure function of the call sequence, which keeps
+the chaos battery (``tests/test_faults.py``) seed-deterministic and
+avoids any clock read inside dispatch.
+
+Failure-counting caveat: dispatch decisions happen at **trace time**.  A
+jitted caller that hits its compiled cache never re-enters dispatch, so
+the breaker sees one trace per (function, shape, config-epoch), not one
+per execution.  That is the right granularity for the failures the
+breaker exists to absorb (lowering/compile errors surface at trace
+time), but it means runtime-only faults inside a cached executable are
+invisible here — those are the engine's ``isfinite`` guard's job
+(:mod:`repro.serving.engine`).
+
+State is process-global (like the autotuner's in-memory cache) and
+thread-safe; :func:`reset` restores a clean slate for tests.  The
+``guard`` knob on :class:`repro.numerics.NumericsConfig` (env:
+``REPRO_GUARD``) disables the whole mechanism, letting kernel errors
+propagate for debugging.
+"""
+from __future__ import annotations
+
+import threading
+
+__all__ = ["THRESHOLD", "COOLDOWN", "make_key", "allow", "success",
+           "failure", "state", "stats", "counters", "reset", "configure"]
+
+# Consecutive failures that open a breaker, and how many declined calls
+# an open breaker sits out before probing again.  Module-level (not per
+# NumericsConfig) because breaker state itself is process-global.
+THRESHOLD = 2
+COOLDOWN = 8
+
+_lock = threading.Lock()
+
+
+class _Breaker:
+    __slots__ = ("state", "consecutive_failures", "cooldown_left",
+                 "failures", "successes", "declined", "opens", "closes",
+                 "last_error")
+
+    def __init__(self):
+        self.state = "closed"
+        self.consecutive_failures = 0
+        self.cooldown_left = 0
+        self.failures = 0
+        self.successes = 0
+        self.declined = 0
+        self.opens = 0
+        self.closes = 0
+        self.last_error = None
+
+
+_breakers: dict[tuple, _Breaker] = {}
+
+# Process-wide health counters (aggregated over all keys, surviving
+# reset of individual breakers only via reset()).
+_totals = {"allowed": 0, "declined": 0, "failures": 0, "successes": 0,
+           "opens": 0, "closes": 0, "half_opens": 0}
+
+
+def configure(*, threshold: int | None = None,
+              cooldown: int | None = None) -> None:
+    """Adjust breaker parameters (tests; ops tuning).  Global."""
+    global THRESHOLD, COOLDOWN
+    with _lock:
+        if threshold is not None:
+            if threshold < 1:
+                raise ValueError("threshold must be >= 1")
+            THRESHOLD = threshold
+        if cooldown is not None:
+            if cooldown < 1:
+                raise ValueError("cooldown must be >= 1")
+            COOLDOWN = cooldown
+
+
+def make_key(kernel: str, ident: tuple) -> tuple:
+    """Breaker key: (backend, kernel, *ident).  ``ident`` is the
+    dispatch site's shape-bucket tuple so quarantine stays per-shape."""
+    import jax
+    return (jax.default_backend(), kernel) + tuple(ident)
+
+
+def _get(key: tuple) -> _Breaker:
+    b = _breakers.get(key)
+    if b is None:
+        b = _breakers.setdefault(key, _Breaker())
+    return b
+
+
+def allow(key: tuple) -> bool:
+    """Gate a dispatch attempt.  False = quarantined; the caller should
+    take the XLA fallback immediately (and must NOT report success or
+    failure for this call)."""
+    with _lock:
+        b = _get(key)
+        if b.state == "open":
+            if b.cooldown_left > 0:
+                b.cooldown_left -= 1
+                b.declined += 1
+                _totals["declined"] += 1
+                return False
+            b.state = "half_open"
+            _totals["half_opens"] += 1
+        _totals["allowed"] += 1
+        return True
+
+
+def success(key: tuple) -> None:
+    """Report a successful kernel call for ``key``."""
+    with _lock:
+        b = _get(key)
+        b.successes += 1
+        b.consecutive_failures = 0
+        _totals["successes"] += 1
+        if b.state != "closed":
+            b.state = "closed"
+            b.closes += 1
+            _totals["closes"] += 1
+
+
+def failure(key: tuple, exc: BaseException | None = None) -> None:
+    """Report a failed kernel call for ``key``; may open the breaker."""
+    with _lock:
+        b = _get(key)
+        b.failures += 1
+        b.consecutive_failures += 1
+        b.last_error = repr(exc) if exc is not None else None
+        _totals["failures"] += 1
+        # A half-open probe failure reopens immediately; a closed breaker
+        # opens once consecutive failures reach the threshold.
+        if b.state == "half_open" or b.consecutive_failures >= THRESHOLD:
+            b.state = "open"
+            b.cooldown_left = COOLDOWN
+            b.opens += 1
+            _totals["opens"] += 1
+
+
+def state(key: tuple) -> str:
+    """"closed" | "open" | "half_open" (unknown keys are closed)."""
+    with _lock:
+        b = _breakers.get(key)
+        return b.state if b is not None else "closed"
+
+
+def stats() -> dict:
+    """Health snapshot: global totals plus per-key breaker detail for
+    every key that has seen at least one failure or decline."""
+    with _lock:
+        keys = {}
+        for key, b in _breakers.items():
+            if b.failures or b.declined or b.state != "closed":
+                keys["/".join(str(k) for k in key)] = {
+                    "state": b.state,
+                    "failures": b.failures,
+                    "successes": b.successes,
+                    "declined": b.declined,
+                    "opens": b.opens,
+                    "closes": b.closes,
+                    "last_error": b.last_error,
+                }
+        return {"totals": dict(_totals), "threshold": THRESHOLD,
+                "cooldown": COOLDOWN, "keys": keys}
+
+
+def counters() -> dict:
+    """Just the global totals (the bench snapshot records these)."""
+    with _lock:
+        return dict(_totals)
+
+
+def reset() -> None:
+    """Drop all breaker state and zero the totals (tests)."""
+    with _lock:
+        _breakers.clear()
+        for k in _totals:
+            _totals[k] = 0

@@ -111,8 +111,31 @@ def candidate_blocks(M: int, N: int, K: int, policy_name: str,
     return out or [(128, 128, 128)]
 
 
+def valid_entry(entry) -> bool:
+    """Schema check for one cache entry: ``{"block": [1-3 positive ints],
+    "ms": None | number, ...}``.
+
+    The cache file is shared, hand-editable state on disk — a truncated
+    write, a stale schema, or plain corruption must read as a *miss* (the
+    tuner re-derives the block), never as a malformed block tuple that
+    trips the kernel's divisibility asserts inside a jit trace."""
+    if not isinstance(entry, dict):
+        return False
+    block = entry.get("block")
+    if not isinstance(block, (list, tuple)) or not 1 <= len(block) <= 3:
+        return False
+    if not all(type(v) is int and v > 0 for v in block):
+        return False
+    ms = entry.get("ms")
+    return ms is None or isinstance(ms, (int, float))
+
+
 class BlockCache:
-    """On-disk JSON cache of measured block choices + in-memory LRU front."""
+    """On-disk JSON cache of measured block choices + in-memory LRU front.
+
+    Reads are guarded: entries failing :func:`valid_entry` (and entries
+    corrupted by the ``tuning.cache`` fault-injection site) are dropped
+    and read as misses."""
 
     def __init__(self, path: str | None = None, capacity: int = 256):
         self.path = path or cache_path()
@@ -160,10 +183,21 @@ class BlockCache:
     def get(self, key: str) -> dict | None:
         if key in self._mem:
             self._mem.move_to_end(key)
-            return self._mem[key]
-        entry = self._load_disk().get(key)
+            entry = self._mem[key]
+        else:
+            entry = self._load_disk().get(key)
         if entry is not None:
-            self._put_mem(key, entry)
+            from repro import faults
+            if faults.poke("tuning.cache") is not None:
+                entry = {"block": "corrupt"}   # injected corruption
+            if not valid_entry(entry):
+                # corrupt entry == miss: drop it from both views so the
+                # tuner re-derives (and eventually re-persists) the block
+                self._mem.pop(key, None)
+                self._load_disk().pop(key, None)
+                return None
+            if key not in self._mem:
+                self._put_mem(key, entry)
         return entry
 
     def _put_mem(self, key: str, entry: dict):

@@ -113,6 +113,12 @@ def main():
     ap.add_argument("--max-slots", type=int, default=0,
                     help="decode batch width (0 = --batch): smaller forces "
                          "queueing, exercising continuous batching")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="bound the waiting queue: requests past it are "
+                         "rejected with EngineOverloaded (0 = unbounded)")
+    ap.add_argument("--deadline", type=int, default=0,
+                    help="per-request deadline in engine steps; expired "
+                         "requests finish with reason=timeout (0 = none)")
     ap.add_argument("--mesh-model", type=int, default=0, metavar="N",
                     help="install a (devices/N, N) (data, model) host mesh: "
                          "the engine shards its page pools (KV heads on "
@@ -157,27 +163,47 @@ def _main(args):
         print("sample:", np.asarray(out[0][:16]))
         return
 
-    from repro.serving import DEFAULT_PAGE_SIZE, Engine, SamplingParams
+    from repro.serving import (DEFAULT_PAGE_SIZE, Engine, EngineOverloaded,
+                               SamplingParams)
     ps = DEFAULT_PAGE_SIZE
     pages = -(-(args.prompt_len + args.gen + 1) // ps)
     slots = args.max_slots or args.batch
     engine = Engine(cfg, params, max_slots=slots,
                     num_pages=1 + max(slots, args.batch) * pages,
-                    page_size=ps, max_pages_per_slot=pages)
+                    page_size=ps, max_pages_per_slot=pages,
+                    max_waiting=args.max_waiting or None)
     t0 = time.time()
-    rids = [engine.add_request(
-        np.asarray(prompts[i]),
-        SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                       top_p=args.top_p, max_tokens=args.gen, seed=i))
-        for i in range(args.batch)]
+    rids = []
+    for i in range(args.batch):
+        try:
+            rids.append(engine.add_request(
+                np.asarray(prompts[i]),
+                SamplingParams(temperature=args.temperature,
+                               top_k=args.top_k, top_p=args.top_p,
+                               max_tokens=args.gen, seed=i),
+                deadline=args.deadline or None))
+        except EngineOverloaded:
+            print(f"request {i}: rejected (overloaded — queue at "
+                  f"{args.max_waiting})")
     out = engine.run()
     dt = time.time() - t0
     toks = sum(len(v) for v in out.values())
+    reasons: dict[str, int] = {}
+    for v in out.values():
+        reasons[v.finish_reason or "?"] = reasons.get(v.finish_reason
+                                                      or "?", 0) + 1
     print(f"engine: {args.batch} requests, {slots} slots, "
           f"{engine.n_prefills} prefills, {engine.n_decode_steps} decode "
           f"steps -> {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s incl. compile)")
-    print("sample:", out[rids[0]][:16])
+    print(f"finish reasons: {reasons}")
+    stats = engine.stats()
+    resilience = {k: stats[k] for k in
+                  ("guard_trips", "fallback_reruns", "rejections",
+                   "overloads", "timeouts", "preemptions", "parks")}
+    print(f"resilience: {resilience}")
+    if rids:
+        print("sample:", out[rids[0]][:16])
 
 
 if __name__ == "__main__":

@@ -150,6 +150,15 @@ ENV_VARS: dict[str, EnvVar] = {v.name: v for v in [
            field="tune"),
     EnvVar("REPRO_TUNE_CACHE", "path", _DEFAULT_TUNE_CACHE,
            "Autotuner cache file path.", field="tune_cache"),
+    EnvVar("REPRO_GUARD", "bool", True,
+           "Guarded dispatch: a fused-kernel failure falls back to the "
+           "XLA term-expansion path and quarantines that (backend, kernel, "
+           "shape-bucket) key for a cooldown (kernels/guard.py).  0 lets "
+           "kernel errors propagate (debugging).", field="guard"),
+    EnvVar("REPRO_FAULTS", "str", "",
+           "Fault-injection plan for chaos testing, e.g. "
+           "'pool.alloc@0:1;decode.slow@every=4' (repro.faults; empty = "
+           "no injection)."),
     EnvVar("REPRO_KEEP_BF16_DOTS", "bool", False,
            "Keep native bf16 dots in lowered HLO on CPU (compiled-artifact "
            "byte accounting for the dry-run; CPU execution may be "
@@ -223,6 +232,7 @@ class NumericsConfig:
     paged_attention: bool = True    # paged decode-attention routing
     paged_block: int | None = None  # pages-per-step override
     shard_map: bool = True          # mesh dispatch via kernels/shmap.py
+    guard: bool = True              # circuit-breaker guarded dispatch
     # -- autotuning ---------------------------------------------------
     tune: str = "auto"              # "auto" | "force" | "off"
     tune_cache: str = _DEFAULT_TUNE_CACHE
@@ -271,6 +281,7 @@ class NumericsConfig:
             paged_attention=not env_value("REPRO_DISABLE_PAGED_ATTN",
                                           environ),
             shard_map=env_value("REPRO_SHARD_MAP", environ),
+            guard=env_value("REPRO_GUARD", environ),
             tune=tune,
             tune_cache=env_value("REPRO_TUNE_CACHE", environ),
             keep_bf16_dots=env_value("REPRO_KEEP_BF16_DOTS", environ),

@@ -1,10 +1,16 @@
 """Serving subsystem: paged KV cache, continuous batching, per-request
 sampling — the third kernel-backed subsystem after GEMM dispatch and flash
-attention.  See docs/serving.md."""
+attention.  See docs/serving.md and docs/robustness.md."""
 from .engine import Engine
+from .errors import (EngineOverloaded, FinishReason, PagePoolError,
+                     RequestRejected, RequestResult, SchedulerInvariantError,
+                     ServingError)
 from .kv_cache import DEFAULT_PAGE_SIZE, PagePool
 from .sampling import SamplingParams
 from .scheduler import Request, RequestState, Scheduler
 
 __all__ = ["Engine", "PagePool", "SamplingParams", "Request",
-           "RequestState", "Scheduler", "DEFAULT_PAGE_SIZE"]
+           "RequestState", "Scheduler", "DEFAULT_PAGE_SIZE",
+           "FinishReason", "RequestResult", "ServingError",
+           "RequestRejected", "EngineOverloaded", "SchedulerInvariantError",
+           "PagePoolError"]

@@ -28,6 +28,17 @@ Numerics contract (tests/test_serving.py): with the paged kernel hatch
 closed (CPU default), greedy engine output is **token-identical** to the
 dense-cache ``launch.serve.generate_dense`` path — the page gather feeds
 bitwise the same attend as the dense cache.
+
+Resilience contract (docs/robustness.md, tests/test_faults.py): requests
+finish with a :class:`~repro.serving.errors.FinishReason`; admission is
+bounded (``max_waiting`` -> :class:`EngineOverloaded`) and validated
+(:class:`RequestRejected`); per-request deadlines are enforced against
+the engine's step clock; the jitted decode step returns a per-slot
+``isfinite`` guard bit, and a tripped step re-runs ONCE under the
+XLA-fallback numerics scope before any slot is failed with
+``finish_reason="error"``; a preemption storm parks its victims
+(``max_preemptions``) instead of livelocking.  Every recovery path is
+fault-injectable via :mod:`repro.faults`.
 """
 from __future__ import annotations
 
@@ -37,9 +48,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import numerics
+from repro import faults, numerics
 from repro.models import get_model
 from . import sampling
+from .errors import (EngineOverloaded, FinishReason, RequestRejected,
+                     RequestResult)
 from .kv_cache import (DEFAULT_PAGE_SIZE, PagePool, inverse_permutation,
                        permute_pages, write_prompt_pages)
 from .sampling import SamplingParams
@@ -71,12 +84,18 @@ class Engine:
     page_size: tokens per page.
     max_pages_per_slot: block-table width; a request that outgrows it is
         finished early (length cap), like any server's max context.
+    max_waiting: waiting-queue bound; ``add_request`` past it raises
+        :class:`EngineOverloaded` (None = unbounded).
+    max_preemptions: evictions before a request is parked as a
+        preemption-storm victim (None = never park).
     """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  num_pages: int | None = None,
                  page_size: int = DEFAULT_PAGE_SIZE,
                  max_pages_per_slot: int | None = None,
+                 max_waiting: int | None = None,
+                 max_preemptions: int | None = 8,
                  numerics_config: numerics.NumericsConfig | None = None,
                  mesh=None):
         # the engine's kernel-dispatch recipe is pinned at construction:
@@ -104,9 +123,20 @@ class Engine:
         self.params = params
         self.model = model
         self.pool = PagePool(num_pages, page_size)
-        self.sched = Scheduler(self.pool, max_slots)
+        self.sched = Scheduler(self.pool, max_slots,
+                               max_preemptions=max_preemptions)
         self.max_slots = max_slots
         self.max_pages_per_slot = max_pages_per_slot
+        self.max_waiting = max_waiting
+        # the deadline clock: one tick per step() (plus injected
+        # decode.slow penalties) — deterministic, no wall-clock reads
+        self.clock = 0
+        # the one-shot re-run recipe for non-finite decode steps: same
+        # policy math on the XLA term-expansion path, no fused kernels
+        self._fallback_numerics = self.numerics_config.replace(enabled=False)
+        self._stats = {"guard_trips": 0, "fallback_reruns": 0,
+                       "numerics_errors": 0, "rejections": 0, "overloads": 0,
+                       "timeouts": 0, "length_caps": 0, "prefill_faults": 0}
         self.pools = model.init_paged_cache(num_pages, page_size)
         if self.mesh is not None:
             self.pools = jax.device_put(self.pools, self._pool_shardings())
@@ -160,16 +190,40 @@ class Engine:
 
     # ------------------------------------------------------------ intake
 
-    def add_request(self, prompt, params: SamplingParams | None = None) -> int:
+    def add_request(self, prompt, params: SamplingParams | None = None,
+                    deadline: int | None = None) -> int:
+        """Enqueue a request; returns its rid.
+
+        Raises :class:`RequestRejected` for requests that can never be
+        served and :class:`EngineOverloaded` when the waiting queue is at
+        ``max_waiting`` (backpressure — retry later).  ``deadline`` is a
+        step budget: the request must finish within that many engine
+        clock ticks or it is timed out (``finish_reason="timeout"``).
+        """
         params = params or SamplingParams()
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
-        assert params.max_tokens >= 1
+        if params.max_tokens < 1:                # was an assert: -O-unsafe
+            self._stats["rejections"] += 1
+            raise RequestRejected(
+                f"max_tokens must be >= 1, got {params.max_tokens}")
         need = self.pool.pages_for(len(prompt) + 1)
         if need > min(self.max_pages_per_slot, self.pool.num_pages - 1):
-            raise ValueError(f"prompt needs {need} pages; engine caps at "
-                             f"{self.max_pages_per_slot} per slot")
+            self._stats["rejections"] += 1
+            raise RequestRejected(
+                f"prompt needs {need} pages; engine caps at "
+                f"{self.max_pages_per_slot} per slot")
+        if deadline is not None and deadline < 1:
+            self._stats["rejections"] += 1
+            raise RequestRejected(f"deadline must be >= 1, got {deadline}")
+        if (self.max_waiting is not None
+                and len(self.sched.waiting) >= self.max_waiting):
+            self._stats["overloads"] += 1
+            raise EngineOverloaded(
+                f"waiting queue is at max_waiting={self.max_waiting}")
         req = self.sched.add(prompt, params)
         req.key = jax.random.PRNGKey(params.seed)
+        if deadline is not None:
+            req.deadline = self.clock + deadline
         self._requests[req.rid] = req
         return req.rid
 
@@ -179,11 +233,12 @@ class Engine:
         # a preempted request may have *generated* its way past the per-slot
         # cap (add_request only guards prompts): finish it from the queue —
         # re-admitting would need more pages than a block-table row holds
-        for req in [r for r in self.sched.waiting
+        for req in [r for r in list(self.sched.waiting) + list(self.sched.parked)
                     if self.pool.pages_for(len(r.full_sequence) + 1)
-                    > self.max_pages_per_slot]:
-            self.sched.waiting.remove(req)
-            req.state = RequestState.FINISHED
+                    > min(self.max_pages_per_slot, self.pool.num_pages - 1)]:
+            self._stats["length_caps"] += 1
+            req.finish_reason = FinishReason.LENGTH_CAP.value
+            self.sched.drop(req)
         admitted = self.sched.admit()
         ps = self.pool.page_size
         # same padded length -> one batched prefill call
@@ -196,7 +251,12 @@ class Engine:
             toks = np.zeros((len(reqs), padded), np.int32)
             for i, req in enumerate(reqs):
                 toks[i, :len(req.full_sequence)] = req.full_sequence
-            logits, kv = self._prefill(self.params, jnp.asarray(toks))
+            try:
+                faults.raise_if("prefill")
+                logits, kv = self._prefill(self.params, jnp.asarray(toks))
+            except Exception as exc:   # noqa: BLE001 — rolled back below
+                self._on_prefill_failure(reqs, exc)
+                continue
             self.n_prefills += 1
             n_prompt_pages = padded // ps
             pages = np.asarray([req.pages[:n_prompt_pages] for req in reqs],
@@ -212,6 +272,31 @@ class Engine:
                 req.key, sub = jax.random.split(req.key)
                 tok = int(sampling.sample_one(row, req.params, sub))
                 self._accept_token(req, tok)
+
+    # a request whose prefill fails this many times finishes with
+    # finish_reason="error" instead of retrying forever
+    MAX_PREFILL_FAULTS = 3
+
+    def _on_prefill_failure(self, reqs: list[Request], exc: Exception):
+        """Roll a failed prefill group back: nothing landed on device yet
+        (the failure happened before ``write_prompt_pages``), so each
+        request is un-admitted back to the head of the queue for a clean
+        retry next step.  Persistent failers finish with
+        ``finish_reason="error"`` after :data:`MAX_PREFILL_FAULTS`
+        attempts.  Real (non-injected) errors propagate when the guard
+        knob is off."""
+        if (not isinstance(exc, faults.FaultInjected)
+                and not self.numerics_config.guard):
+            raise exc
+        self._stats["prefill_faults"] += 1
+        # reversed: appendleft-ing restores the group's original FIFO order
+        for req in reversed(reqs):
+            req.n_prefill_faults += 1
+            if req.n_prefill_faults >= self.MAX_PREFILL_FAULTS:
+                self._stats["numerics_errors"] += 1
+                self._finish(req, FinishReason.ERROR)
+            else:
+                self.sched.unadmit(req)
 
     def _sync_slot(self, req: Request):
         """Push a request's page list and sampling knobs into its slot."""
@@ -234,16 +319,18 @@ class Engine:
     def _accept_token(self, req: Request, tok: int) -> bool:
         """Host-side completion logic; returns True while still running."""
         if tok in req.params.stop_tokens:
-            self._finish(req)
+            self._finish(req, FinishReason.STOP)
             return False
         req.out.append(tok)
         if len(req.out) >= req.params.max_tokens:
-            self._finish(req)
+            self._finish(req, FinishReason.LENGTH)
             return False
         self.next_tok[req.slot] = tok
         return True
 
-    def _finish(self, req: Request):
+    def _finish(self, req: Request, reason: FinishReason):
+        req.finish_reason = (reason.value if isinstance(reason, FinishReason)
+                             else str(reason))
         slot = req.slot
         self.sched.finish(req)
         self._clear_slot(slot)
@@ -260,13 +347,29 @@ class Engine:
                 continue
             page_idx = int(self.lengths[req.slot]) // ps
             if page_idx >= self.max_pages_per_slot:
-                self._finish(req)       # hit the per-slot length cap
+                self._stats["length_caps"] += 1
+                self._finish(req, FinishReason.LENGTH_CAP)
                 continue
             if page_idx >= len(req.pages):
                 before = {r.rid: r.slot for r in self.sched.running.values()}
                 if not self.sched.grow(req):
-                    raise RuntimeError(
-                        "page pool too small for a single request")
+                    slot = req.slot
+                    if len(req.pages) + 1 >= self.pool.num_pages:
+                        # the pool cannot hold even this one request:
+                        # finish it gracefully (its tokens so far are
+                        # still valid) instead of crashing the engine
+                        self._finish(req, FinishReason.ERROR)
+                    else:
+                        # transient exhaustion (an injected alloc fault,
+                        # or pages freed off-schedule): requeue and retry
+                        # — recompute-preemption of self, not a failure
+                        self.sched.preempt(req)
+                        self._clear_slot(slot)
+                    for rid, s in before.items():
+                        r = self._requests[rid]
+                        if r.slot is None and rid != req.rid:
+                            self._clear_slot(s)
+                    continue
                 for rid, slot in before.items():
                     r = self._requests[rid]
                     if r.slot is None:          # got preempted: mask slot
@@ -274,37 +377,97 @@ class Engine:
                 self.block_tables[req.slot] = 0
                 self.block_tables[req.slot, :len(req.pages)] = req.pages
 
+    def _poison_mask(self) -> np.ndarray:
+        """Poll the ``decode.nonfinite`` fault site: a (max_slots,) bool
+        mask of slots whose logits this step will NaN-poison (all-False
+        keeps the jitted step's logits bitwise identical — zero parity
+        cost on the fault-free path)."""
+        poison = np.zeros((self.max_slots,), bool)
+        spec = faults.poke("decode.nonfinite")
+        if spec is not None:
+            if spec.arg < 0:
+                poison[:] = True
+            else:
+                poison[spec.arg % self.max_slots] = True
+        return poison
+
     def _decode_step(self):
         running = [r for r in self.sched.running.values()]
         if not running:
             return
-        toks, self.pools, self.keys = self._decode(
-            self.params, self.pools, jnp.asarray(self.block_tables),
-            jnp.asarray(self.lengths), jnp.asarray(self.next_tok),
-            jnp.asarray(self.temps), jnp.asarray(self.topks),
-            jnp.asarray(self.topps), self.keys)
+        args = (self.params, jnp.asarray(self.block_tables),
+                jnp.asarray(self.lengths), jnp.asarray(self.next_tok),
+                jnp.asarray(self.temps), jnp.asarray(self.topks),
+                jnp.asarray(self.topps))
+        prev_keys = self.keys        # NOT donated: reusable for the re-run
+        toks, finite, pools, keys = self._decode(
+            args[0], self.pools, *args[1:], prev_keys,
+            jnp.asarray(self._poison_mask()))
         self.n_decode_steps += 1
+        finite = np.asarray(finite)
+        bad = [r for r in running if not finite[r.slot]]
+        if bad and self.numerics_config.guard:
+            # one-shot re-run of the whole step under the XLA-fallback
+            # numerics scope.  Safe to replay against the post-step pools:
+            # the step only writes the current position's K/V, which the
+            # re-run overwrites before reading.  prev_keys keeps every
+            # fault-free slot's sampling stream from advancing twice.
+            self._stats["guard_trips"] += 1
+            self._stats["fallback_reruns"] += 1
+            with numerics.use(self._fallback_numerics):
+                toks, finite, pools, keys = self._decode(
+                    args[0], pools, *args[1:], prev_keys,
+                    jnp.asarray(self._poison_mask()))
+            finite = np.asarray(finite)
+        self.pools, self.keys = pools, keys
         toks = np.asarray(toks)
         for req in running:
+            if not finite[req.slot]:
+                # the fallback tripped too (or the guard is off): fail
+                # THIS request; its neighbours in the batch are unharmed
+                self._stats["numerics_errors"] += 1
+                self._finish(req, FinishReason.ERROR)
+                continue
             self.lengths[req.slot] += 1      # its input token is now cached
             req.key = self.keys[req.slot]
             self._accept_token(req, int(toks[req.slot]))
 
     # ------------------------------------------------------------- drive
 
+    def _expire_deadlines(self):
+        """Time out requests (running or queued) whose deadline tick has
+        passed.  Runs at the top of every step, so a timed-out request
+        never consumes another prefill or decode."""
+        for req in list(self.sched.running.values()):
+            if req.deadline is not None and self.clock > req.deadline:
+                self._stats["timeouts"] += 1
+                self._finish(req, FinishReason.TIMEOUT)
+        for req in [r for r in
+                    list(self.sched.waiting) + list(self.sched.parked)
+                    if r.deadline is not None and self.clock > r.deadline]:
+            self._stats["timeouts"] += 1
+            req.finish_reason = FinishReason.TIMEOUT.value
+            self.sched.drop(req)
+
     def step(self):
-        """One engine iteration: admit + prefill, then one decode step for
-        whatever is in flight — under the construction-time numerics and
-        mesh scopes."""
+        """One engine iteration: tick the deadline clock, expire
+        deadlines, admit + prefill, then one decode step for whatever is
+        in flight — under the construction-time numerics and mesh
+        scopes."""
         with self._scopes():
+            self.clock += 1
+            spec = faults.poke("decode.slow")
+            if spec is not None:         # injected slowdown: burn ticks
+                self.clock += max(1, spec.arg)
+            self._expire_deadlines()
             self._admit_and_prefill()
             self._ensure_pages()
             self._decode_step()
 
-    def run(self, prompts=None, params=None) -> dict[int, list[int]]:
+    def run(self, prompts=None, params=None) -> dict[int, RequestResult]:
         """Convenience driver: optionally enqueue ``prompts`` (with one
         :class:`SamplingParams` each, or one shared), run to drain, and
-        return ``{rid: generated tokens}`` for everything enqueued since
+        return :meth:`results` for everything enqueued since
         construction."""
         if prompts is not None:
             if params is None:
@@ -315,7 +478,29 @@ class Engine:
                 self.add_request(prompt, sp)
         while self.sched.has_work:
             self.step()
-        return {rid: list(req.out) for rid, req in self._requests.items()}
+        return self.results()
+
+    def results(self) -> dict[int, RequestResult]:
+        """``{rid: RequestResult}`` — generated tokens (list-compatible)
+        plus ``finish_reason`` — for every request seen so far."""
+        return {rid: RequestResult(req.out, req.finish_reason)
+                for rid, req in self._requests.items()}
+
+    def stats(self) -> dict:
+        """Resilience and throughput counters: engine counters (guard
+        trips, fallback re-runs, rejections, overloads, timeouts, length
+        caps, prefill faults, numerics errors), scheduler counters
+        (preemptions, parks), and the kernel circuit breaker's global
+        totals.  All zero on a healthy fault-free run — the serving bench
+        snapshot records them so CI gates on exactly that."""
+        from repro.kernels import guard
+        return {**self._stats,
+                "clock": self.clock,
+                "prefills": self.n_prefills,
+                "decode_steps": self.n_decode_steps,
+                "preemptions": self.sched.n_preemptions,
+                "parks": self.sched.n_parks,
+                "breaker": guard.counters()}
 
     # ------------------------------------------------------------ defrag
 
@@ -333,15 +518,26 @@ class Engine:
 
 
 def _decode_and_sample(params, pools, block_tables, lengths, toks, temps,
-                       topks, topps, keys, *, model, cfg):
+                       topks, topps, keys, poison, *, model, cfg):
     """The jitted engine step: paged model decode + vectorized sampling +
-    per-slot key advance, one dispatch for the whole slot array."""
+    per-slot key advance, one dispatch for the whole slot array.
+
+    Returns ``(tokens, finite, new_pools, new_keys)`` where ``finite`` is
+    the per-slot isfinite guard bit — False means this slot's logits
+    contain a non-finite value and its sampled token must not be trusted
+    (the engine re-runs the step under the XLA-fallback scope).
+    ``poison`` is the ``decode.nonfinite`` fault mask: poisoned slots get
+    their logits NaN'd *after* the model forward, so an all-False mask is
+    bitwise identical to the unpoisoned computation.
+    """
     logits, new_pools = model.decode_step_paged(params, pools, block_tables,
                                                 lengths, toks)
     logits = logits[:, :cfg.vocab_size].astype(jnp.float32)
+    logits = jnp.where(poison[:, None], jnp.nan, logits)
+    finite = jnp.all(jnp.isfinite(logits), axis=-1)   # (B,) guard bit
     # split convention must match the prefill draw (`key, sub = split(key)`:
     # carry row 0, sample with row 1) — otherwise a preemption's re-prefill
     # would resume a request's stream on the wrong side of the split
     split = jax.vmap(jax.random.split)(keys)          # (B, 2, 2)
     out = sampling.sample(logits, temps, topks, topps, split[:, 1])
-    return out, new_pools, split[:, 0]
+    return out, finite, new_pools, split[:, 0]

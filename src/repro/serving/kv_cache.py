@@ -27,6 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .errors import PagePoolError
+
 DEFAULT_PAGE_SIZE = 16
 
 # The pool arrays are the dominant serving allocation and every update
@@ -44,8 +46,13 @@ class PagePool:
     """
 
     def __init__(self, num_pages: int, page_size: int = DEFAULT_PAGE_SIZE):
-        assert num_pages >= 2, "need at least the scrap page + one real page"
-        assert page_size >= 1
+        # real checks, not asserts: these guard user-supplied sizing and
+        # must survive python -O
+        if num_pages < 2:
+            raise ValueError("need at least the scrap page + one real page; "
+                             f"got num_pages={num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.num_pages = num_pages
         self.page_size = page_size
         # page 0 is the scrap page — never handed out
@@ -65,7 +72,15 @@ class PagePool:
         return max(1, -(-n_tokens // self.page_size))
 
     def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages, or None (and no change) if they don't fit."""
+        """Pop ``n`` pages, or None (and no change) if they don't fit.
+
+        The ``pool.alloc`` fault site injects transient exhaustion here
+        (returns None with pages available) — the same signal callers
+        must already handle, so every alloc site is chaos-testable.
+        """
+        from repro import faults
+        if faults.poke("pool.alloc") is not None:
+            return None
         if n > len(self._free):
             return None
         taken = self._free[-n:][::-1]
@@ -74,8 +89,11 @@ class PagePool:
 
     def free(self, pages: list[int]) -> None:
         for p in pages:
-            assert 0 < p < self.num_pages, p
-            assert p not in self._free, f"double free of page {p}"
+            if not 0 < p < self.num_pages:
+                raise PagePoolError(f"free of out-of-range page {p} "
+                                    f"(pool has {self.num_pages})")
+            if p in self._free:
+                raise PagePoolError(f"double free of page {p}")
             self._free.append(p)
 
     def defrag(self) -> dict[int, int]:

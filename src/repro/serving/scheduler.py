@@ -18,6 +18,15 @@ Decisions (deliberately boring, and unit-tested as such):
     *front* of the waiting queue with its generated tokens intact — on
     re-admission its prompt is ``prompt + generated`` (recompute-style
     preemption; no page swapping).
+  * **preemption-storm parking**: a request evicted ``max_preemptions``
+    times is *parked* instead of requeued — it sits out until the waiting
+    queue drains, then rejoins at the front.  Recompute-style preemption
+    re-prefills the victim's whole sequence, so a thrashing mix (pool
+    slightly too small for the resident set) can burn most of its steps
+    re-prefilling the same requests; parking converts that storm into
+    ordinary queueing delay.  FIFO fairness survives because parking
+    only triggers *after* repeated evictions, and a parked request
+    re-enters at the head.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
 
+from .errors import SchedulerInvariantError
 from .kv_cache import PagePool
 from .sampling import SamplingParams
 
@@ -48,6 +58,9 @@ class Request:
     pages: list[int] = field(default_factory=list)
     n_preemptions: int = 0
     key: object = None          # per-request PRNG key (engine-owned)
+    finish_reason: str | None = None   # serving.errors.FinishReason value
+    deadline: int | None = None        # engine-clock tick to finish by
+    n_prefill_faults: int = 0          # failed prefill attempts (engine)
 
     @property
     def full_sequence(self) -> list[int]:
@@ -63,14 +76,19 @@ class Request:
 class Scheduler:
     """FIFO admission + LIFO preemption over a :class:`PagePool`."""
 
-    def __init__(self, pool: PagePool, max_slots: int):
+    def __init__(self, pool: PagePool, max_slots: int,
+                 max_preemptions: int | None = None):
         self.pool = pool
         self.max_slots = max_slots
+        self.max_preemptions = max_preemptions         # None = never park
         self.waiting: deque[Request] = deque()
+        self.parked: deque[Request] = deque()          # storm victims
         self.running: dict[int, Request] = {}          # slot -> request
         self._ids = itertools.count()
         self._admit_seq = itertools.count()            # recency for victims
         self._admitted_at: dict[int, int] = {}         # rid -> seq
+        self.n_preemptions = 0                         # total evictions
+        self.n_parks = 0                               # storm detections
 
     # ------------------------------------------------------------ intake
 
@@ -84,7 +102,7 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.parked or self.running)
 
     def free_slots(self) -> list[int]:
         return [s for s in range(self.max_slots) if s not in self.running]
@@ -97,6 +115,12 @@ class Scheduler:
         growth page worth of headroom (so a request never needs a page on
         its very first decode step) and assigns a slot; the engine then
         prefills the batch it gets back."""
+        # parked storm victims rejoin (at the head — they are the oldest
+        # work in the system) once the regular queue has drained: by then
+        # the mix that was thrashing them has left the pool
+        if self.parked and not self.waiting:
+            self.waiting.extendleft(reversed(self.parked))
+            self.parked.clear()
         admitted = []
         slots = self.free_slots()
         while self.waiting and slots:
@@ -136,25 +160,59 @@ class Scheduler:
             return None
         return max(cands, key=lambda r: self._admitted_at[r.rid])
 
-    def preempt(self, req: Request) -> None:
-        """Evict a running request: free its pages, requeue it at the
-        FRONT of the waiting queue with generated tokens intact."""
-        assert req.slot in self.running and self.running[req.slot] is req
+    def _release(self, req: Request, verb: str) -> None:
+        """Shared teardown: drop the slot binding and free the pages,
+        with the residency invariant as a real check (not an assert —
+        this is control flow and must survive ``python -O``)."""
+        if req.slot not in self.running or self.running[req.slot] is not req:
+            raise SchedulerInvariantError(
+                f"{verb} of request {req.rid} which is not resident in "
+                f"slot {req.slot}")
         del self.running[req.slot]
         self.pool.free(req.pages)
         req.pages = []
         req.slot = None
+
+    def preempt(self, req: Request) -> None:
+        """Evict a running request: free its pages, requeue it at the
+        FRONT of the waiting queue with generated tokens intact — or park
+        it once it has been evicted ``max_preemptions`` times (storm
+        detection; see the module docstring)."""
+        self._release(req, "preempt")
         req.state = RequestState.WAITING
         req.n_preemptions += 1
+        self.n_preemptions += 1
+        if (self.max_preemptions is not None
+                and req.n_preemptions >= self.max_preemptions):
+            self.n_parks += 1
+            self.parked.append(req)
+        else:
+            self.waiting.appendleft(req)
+
+    def unadmit(self, req: Request) -> None:
+        """Roll an admission back (prefill failed before any state
+        landed): free pages and slot, requeue at the FRONT.  Unlike
+        :meth:`preempt` this is not an eviction — it doesn't count
+        toward the storm detector."""
+        self._release(req, "unadmit")
+        req.state = RequestState.WAITING
         self.waiting.appendleft(req)
 
     # ------------------------------------------------------- completion
 
     def finish(self, req: Request) -> None:
         """Release a completed request's slot and pages (slot recycling)."""
-        assert req.slot in self.running and self.running[req.slot] is req
-        del self.running[req.slot]
-        self.pool.free(req.pages)
-        req.pages = []
-        req.slot = None
+        self._release(req, "finish")
+        req.state = RequestState.FINISHED
+
+    def drop(self, req: Request) -> None:
+        """Finish a request that is still queued (waiting or parked) —
+        deadline expiry, length-cap purge."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+        elif req in self.parked:
+            self.parked.remove(req)
+        else:
+            raise SchedulerInvariantError(
+                f"drop of request {req.rid} which is not queued")
         req.state = RequestState.FINISHED

@@ -23,8 +23,8 @@ from repro.kernels.tcec_paged_attention import (paged_vmem_bytes,
 from repro.core.policy import get_policy
 from repro.models import get_model
 from repro.models import layers as L
-from repro.serving import (Engine, PagePool, SamplingParams, Scheduler,
-                           sampling)
+from repro.serving import (Engine, PagePool, PagePoolError, SamplingParams,
+                           Scheduler, sampling)
 from repro.serving.kv_cache import inverse_permutation, permute_pages
 
 
@@ -61,7 +61,7 @@ def test_page_pool_alloc_free_roundtrip():
     assert pool.num_free == 4            # failed alloc changed nothing
     pool.free(a)
     assert pool.num_free == 7 and pool.num_live == 0
-    with pytest.raises(AssertionError):
+    with pytest.raises(PagePoolError):
         pool.free(a[:1])                 # double free
 
 
