@@ -142,6 +142,28 @@ def run(smoke: bool = False) -> bool:
          f"{engine.n_prefills} prefills / {engine.n_decode_steps} decode "
          "steps for the mixed run (continuous batching, 3 requests on 2 "
          "slots)")
+
+    # ---- request latency via tracing (repro.obs) ------------------------
+    # One traced engine run feeds the serving/latency/* histograms; the
+    # percentiles become gated wall-clock metrics (kind="measured", so the
+    # twice-run determinism battery exempts them from bit-identity).  The
+    # histograms are reset first: that battery runs this bench twice
+    # in-process and the percentiles should describe THIS run.
+    from repro import obs
+    for name in ("ttft_s", "tpot_s", "queue_wait_s"):
+        obs.metrics.histogram(f"serving/latency/{name}").reset()
+    with obs.trace():
+        _engine_run(cfg, params, mixed, max_slots=2, max_tokens=gen)
+    ttft = obs.metrics.histogram("serving/latency/ttft_s")
+    tpot = obs.metrics.histogram("serving/latency/tpot_s")
+    qwait = obs.metrics.histogram("serving/latency/queue_wait_s")
+    lat_ok = ttft.count() == len(mixed) and tpot.count() > 0
+    ok &= lat_ok
+    for label, hist, p in (("ttft_p50_s", ttft, 50), ("ttft_p99_s", ttft, 99),
+                           ("tpot_p50_s", tpot, 50), ("tpot_p99_s", tpot, 99),
+                           ("queue_wait_p50_s", qwait, 50)):
+        record(f"serving/latency/{label}", hist.percentile(p), unit="s",
+               kind="measured", higher_is_better=False)
     if smoke:
         return ok
 

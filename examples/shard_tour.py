@@ -63,10 +63,10 @@ with numerics.use(force=True, interpret=True, min_dim=0,
     v = jnp.asarray(rng.standard_normal((2, 256, 4, 64)), jnp.float32)
     with numerics.use(attn_block=(128, 128)):
         refa = repro.attention(q, k, v, policy="tcec_bf16x6", window=37)
-        n0 = repro.shmap.CALLS["attention"]
+        n0 = repro.shmap.counters()["attention"]
         with ctx.use_mesh(mesh):
             outa = repro.attention(q, k, v, policy="tcec_bf16x6", window=37)
-    assert repro.shmap.CALLS["attention"] == n0 + 1
+    assert repro.shmap.counters()["attention"] == n0 + 1
     assert np.array_equal(np.asarray(outa), np.asarray(refa))
     aplan = repro.shmap.attention_plan(q.shape, k.shape, mesh)
     print(f"{aplan.mode}-sharded attention: routed via shard_map "

@@ -8,6 +8,10 @@ callers need without touching ``repro.kernels.*`` or
 * **Verbs** — :func:`repro.matmul`, :func:`repro.einsum`,
   :func:`repro.attention`: policy-routed, differentiable, dispatched to
   the fused Pallas kernels when eligible.
+* **Telemetry** — :mod:`repro.obs`: metrics registry, request tracing
+  (``with repro.obs.trace(): ...`` + :func:`repro.obs.export`), dispatch
+  explainability (:func:`repro.obs.explain`), and the numerics-health
+  monitors (``REPRO_MONITOR``).
 * **Config** — :mod:`repro.numerics`: the one context-scoped recipe
   (``with repro.numerics.use(policy="tcec_bf16x6", force=True): ...``)
   unifying policy selection, kernel dispatch, and autotuning, with the
@@ -27,7 +31,7 @@ __all__ = [
     "numerics", "NumericsConfig", "matmul", "einsum", "attention",
     "Policy", "POLICIES", "get_policy", "pdot", "policy_mm", "policy_bmm",
     "tcec_matmul", "tcec_attention", "tcec_paged_attention", "tuning",
-    "shmap", "VMEM_BUDGET", "vmem_bytes", "faults", "guard",
+    "shmap", "VMEM_BUDGET", "vmem_bytes", "faults", "guard", "obs",
 ]
 
 # Heavier subsystems load lazily (PEP 562): `import repro` must stay cheap
@@ -48,6 +52,7 @@ _LAZY = {
     "faults": ("repro.faults", None),
     "guard": ("repro.kernels.guard", None),
     "shmap": ("repro.kernels.shmap", None),
+    "obs": ("repro.obs", None),
     "VMEM_BUDGET": ("repro.kernels.tcec_matmul", "VMEM_BUDGET"),
     "vmem_bytes": ("repro.kernels.tcec_matmul", "vmem_bytes"),
 }

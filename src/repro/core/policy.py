@@ -184,6 +184,11 @@ def _dot_impl(a, b, policy: PrecisionPolicy, dims, cfg=None):
     if cfg is None:
         cfg = numerics.active()
     if policy.is_plain():
+        # plain policies never reach kernels/dispatch.py — record the
+        # rule-1 decline here so explain() covers every contraction
+        from repro.obs.explain import record as _explain
+        _explain("matmul", policy.name,
+                 (tuple(a.shape), tuple(b.shape)), "plain-policy")
         return _plain_dot(a, b, policy, dims, cfg)
     out = _maybe_pallas(a, b, policy, dims, cfg)
     if out is not None:
@@ -233,16 +238,38 @@ def _make_dg(policy_name: str, nbatch: int, nm: int, nk: int, nn: int):
     return dg
 
 
+def _maybe_monitor(a, b, policy: PrecisionPolicy, site: str):
+    """Numerics-health probe hook (repro.obs.numerics_health), gated on
+    ``NumericsConfig.monitor`` (default off -> no graph change at all).
+
+    Called at trace time from the contraction front-ends — *outside* the
+    ``custom_vjp`` core, so only forward operands are probed (debug
+    callbacks inside custom_vjp rules are off-limits) and the probe runs
+    once per contraction, not again per backward GEMM.
+    """
+    if policy.is_plain():
+        return
+    from repro import numerics
+    if not numerics.active().monitor:
+        return
+    from repro.obs import numerics_health
+    numerics_health.observe(a, b, policy, site=site)
+
+
 def policy_mm(a, b, policy=None):
     """(M, K) @ (K, N) -> (M, N) f32 under ``policy`` (None = the active
     config's policy; env default ``fp32``)."""
-    return _make_dg(get_policy(policy).name, 0, 1, 1, 1)(a, b)
+    pol = get_policy(policy)
+    _maybe_monitor(a, b, pol, "mm")
+    return _make_dg(pol.name, 0, 1, 1, 1)(a, b)
 
 
 def policy_bmm(a, b, policy=None):
     """(B, M, K) @ (B, K, N) -> (B, M, N) f32 under ``policy`` (None = the
     active config's policy; env default ``fp32``)."""
-    return _make_dg(get_policy(policy).name, 1, 1, 1, 1)(a, b)
+    pol = get_policy(policy)
+    _maybe_monitor(a, b, pol, "bmm")
+    return _make_dg(pol.name, 1, 1, 1, 1)(a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +304,7 @@ def pdot(subscripts: str, a, b, policy=None):
 
     at = jnp.transpose(a, ax(a_sub, batch + m_dims + contract))
     bt = jnp.transpose(b, ax(b_sub, batch + contract + n_dims))
+    _maybe_monitor(at, bt, policy, "pdot")
     core = _make_dg(policy.name, len(batch), len(m_dims), len(contract),
                     len(n_dims))
     o = core(at, bt)                     # (batch..., m..., n...)

@@ -52,11 +52,18 @@ import jax.numpy as jnp
 
 from repro import numerics
 from repro.core.policy import PrecisionPolicy
+from repro.obs.explain import record as _explain
 from . import ops, tuning
 
 
 def _cfg(cfg) -> numerics.NumericsConfig:
     return cfg if cfg is not None else numerics.active()
+
+
+def _policy_rule(policy: PrecisionPolicy) -> str:
+    """Rule-1 decline slug: plain policies vs the fp16 reproduction
+    policies (repro.obs.explain vocabulary)."""
+    return "plain-policy" if policy.is_plain() else "policy-ineligible"
 
 
 def _guarded(kernel: str, ident: tuple, cfg, thunk, site: str):
@@ -71,22 +78,31 @@ def _guarded(kernel: str, ident: tuple, cfg, thunk, site: str):
 
     NB this runs at trace time: a jitted caller consults the breaker
     once per (function, shape, config-epoch) trace, not per execution.
+    Every outcome — launch, open breaker, kernel failure — lands in the
+    explain table (``ident`` is ``(policy, *shape-bucket)`` at all three
+    call sites, matching the explain key convention).
     """
     from repro import faults
+    pol, bucket = str(ident[0]), tuple(ident[1:])
     if not cfg.guard:
         faults.raise_if(site)
-        return thunk()
+        out = thunk()
+        _explain(kernel, pol, bucket, "fused")
+        return out
     from . import guard
     key = guard.make_key(kernel, ident)
     if not guard.allow(key):
+        _explain(kernel, pol, bucket, "breaker-open")
         return None
     try:
         faults.raise_if(site)
         out = thunk()
     except Exception as exc:       # noqa: BLE001 — fallback exists by design
         guard.failure(key, exc)
+        _explain(kernel, pol, bucket, "kernel-failure")
         return None
     guard.success(key)
+    _explain(kernel, pol, bucket, "fused")
     return out
 
 
@@ -149,31 +165,41 @@ def _mesh_plan_or_decline(shapes_plan, cfg):
     return mesh, (plan if plan is not None else "decline")
 
 
+def _decide(a, b, policy: PrecisionPolicy, dims, cfg):
+    """The rule walk: ``(canonical operands | None, rule slug)`` — the
+    slug names the declining rule (repro.obs.explain vocabulary) or is
+    ``"fused"`` on acceptance."""
+    if not cfg.enabled:
+        return None, "hatch-disabled"
+    if not eligible_policy(policy):
+        return None, _policy_rule(policy)
+    if not (cfg.force or jax.default_backend() == "tpu"):
+        return None, "off-backend"
+    canon = _canonicalize(a, b, dims)
+    if canon is None:
+        return None, "shape-unsupported"
+    at, bt = canon
+    M, K = at.shape[-2], at.shape[-1]
+    N = bt.shape[-1]
+    if min(M, N, K) < cfg.min_dim:
+        return None, "below-min-dim"
+    from . import shmap
+    _, plan = _mesh_plan_or_decline(
+        lambda mesh: shmap.matmul_plan(at.shape, bt.shape, mesh), cfg)
+    if plan == "decline":
+        return None, "mesh-declined"
+    return canon, "fused"
+
+
 def decide(a, b, policy: PrecisionPolicy, dims, cfg=None):
     """The GEMM dispatch decision, with the config threaded explicitly.
 
     Returns the canonicalized ``(a, b)`` operands when the contraction
     should lower to the fused kernel, or None for the XLA fallback.
+    (Probing only — ``maybe_dispatch`` records the explain decision.)
     """
-    cfg = _cfg(cfg)
-    if not cfg.enabled or not eligible_policy(policy):
-        return None
-    if not (cfg.force or jax.default_backend() == "tpu"):
-        return None
-    canon = _canonicalize(a, b, dims)
-    if canon is None:
-        return None
-    at, bt = canon
-    M, K = at.shape[-2], at.shape[-1]
-    N = bt.shape[-1]
-    if min(M, N, K) < cfg.min_dim:
-        return None
-    from . import shmap
-    _, plan = _mesh_plan_or_decline(
-        lambda mesh: shmap.matmul_plan(at.shape, bt.shape, mesh), cfg)
-    if plan == "decline":
-        return None
-    return at, bt
+    canon, _ = _decide(a, b, policy, dims, _cfg(cfg))
+    return canon
 
 
 def maybe_dispatch(a, b, policy: PrecisionPolicy, dims, cfg=None):
@@ -181,11 +207,15 @@ def maybe_dispatch(a, b, policy: PrecisionPolicy, dims, cfg=None):
 
     Called from ``repro.core.policy._dot_impl`` for every split-policy
     contraction (forward and backward).  Under an installed mesh the call
-    runs per shard through the ``shard_map`` wrapper (rule 6).
+    runs per shard through the ``shard_map`` wrapper (rule 6).  Declines
+    record their rule in the explain table here; launches record inside
+    ``_guarded``.
     """
     cfg = _cfg(cfg)
-    canon = decide(a, b, policy, dims, cfg)
+    canon, rule = _decide(a, b, policy, dims, cfg)
     if canon is None:
+        _explain("matmul", policy.name,
+                 (tuple(a.shape), tuple(b.shape)), rule)
         return None
     at, bt = canon
     from . import shmap
@@ -197,6 +227,7 @@ def maybe_dispatch(a, b, policy: PrecisionPolicy, dims, cfg=None):
     ident = (policy.name,) + tuning.shape_bucket(B, M, N, K)
     if mesh is not None:
         if plan == "decline":         # decide() screens this; stay graceful
+            _explain("matmul", policy.name, ident[1:], "mesh-declined")
             return None
         return _guarded(
             "matmul", ident, cfg,
@@ -213,6 +244,40 @@ def maybe_dispatch(a, b, policy: PrecisionPolicy, dims, cfg=None):
 
 # ------------------------------------------------- attention dispatch
 
+def _attention_reason(q, k, v, pol, cfg) -> str:
+    """The attention rule walk: ``"fused"`` when eligible, else the
+    declining rule's explain slug."""
+    if not cfg.enabled or not cfg.flash_attention:
+        return "hatch-disabled"
+    if not eligible_policy(pol):
+        return _policy_rule(pol)
+    if not (cfg.force or jax.default_backend() == "tpu"):
+        return "off-backend"
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        return "shape-unsupported"
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    if (k.shape[0] != B or v.shape[:3] != k.shape[:3] or k.shape[3] != hd
+            or Hkv == 0 or H % Hkv):
+        return "shape-unsupported"
+    if min(S, T) < cfg.min_dim:
+        return "below-min-dim"
+    from . import shmap
+    _, plan = _mesh_plan_or_decline(
+        lambda mesh: shmap.attention_plan(q.shape, k.shape, mesh), cfg)
+    if plan == "decline":
+        return "mesh-declined"
+    # even the minimum (128, 128) block must fit VMEM — extreme-rep GQA
+    # (rep ~ 100+ query heads per KV head) declines to the XLA path
+    # instead of tripping the kernel's budget assert inside jit
+    from .tcec_attention import attn_vmem_bytes
+    from .tcec_matmul import VMEM_BUDGET
+    if attn_vmem_bytes((128, 128), H // Hkv, hd, v.shape[3],
+                       pol) > VMEM_BUDGET:
+        return "vmem-budget"
+    return "fused"
+
+
 def attention_eligible(q, k, v, *, policy, cfg=None) -> bool:
     """Trace-time eligibility of the fused attention kernel for these
     operands.  True iff: split bf16 policy; TPU backend or ``force``;
@@ -222,35 +287,21 @@ def attention_eligible(q, k, v, *, policy, cfg=None) -> bool:
     per-shard spec for these shapes (head- or q-sequence-sharded), in
     which case the kernel runs per device under ``shard_map``.  An
     unsupported spec declines to the pdot fallbacks, which carry the
-    context-parallel sharding constraints."""
+    context-parallel sharding constraints.
+
+    Declines record their rule in the explain table here (the sdpa call
+    sites pre-check eligibility and skip :func:`attention` entirely when
+    False); acceptances record inside ``_guarded`` at launch.
+    """
     from repro.core.policy import get_policy
     cfg = _cfg(cfg)
     pol = get_policy(policy)
-    if not cfg.enabled or not cfg.flash_attention or not eligible_policy(pol):
+    reason = _attention_reason(q, k, v, pol, cfg)
+    if reason != "fused":
+        _explain("attention", pol.name,
+                 (tuple(q.shape), tuple(k.shape)), reason)
         return False
-    if not (cfg.force or jax.default_backend() == "tpu"):
-        return False
-    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
-        return False
-    B, S, H, hd = q.shape
-    T, Hkv = k.shape[1], k.shape[2]
-    if (k.shape[0] != B or v.shape[:3] != k.shape[:3] or k.shape[3] != hd
-            or Hkv == 0 or H % Hkv):
-        return False
-    if min(S, T) < cfg.min_dim:
-        return False
-    from . import shmap
-    _, plan = _mesh_plan_or_decline(
-        lambda mesh: shmap.attention_plan(q.shape, k.shape, mesh), cfg)
-    if plan == "decline":
-        return False
-    # even the minimum (128, 128) block must fit VMEM — extreme-rep GQA
-    # (rep ~ 100+ query heads per KV head) declines to the XLA path
-    # instead of tripping the kernel's budget assert inside jit
-    from .tcec_attention import attn_vmem_bytes
-    from .tcec_matmul import VMEM_BUDGET
-    return attn_vmem_bytes((128, 128), H // Hkv, hd, v.shape[3],
-                           pol) <= VMEM_BUDGET
+    return True
 
 
 def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
@@ -286,6 +337,7 @@ def attention(q, k, v, *, policy, q_pos=None, k_pos=None, causal: bool = True,
              tuning._round_up(S, 128), tuning._round_up(T, 128))
     if mesh is not None:
         if plan == "decline":         # eligibility screens this; graceful
+            _explain("attention", pol.name, ident[1:], "mesh-declined")
             return None
         return _guarded(
             "attention", ident, cfg,
@@ -334,26 +386,41 @@ def attention_decode_eligible(q, k_pages, v_pages, *, policy,
     from repro.core.policy import get_policy
     cfg = _cfg(cfg)
     pol = get_policy(policy)
-    if not cfg.enabled or not cfg.paged_attention or not eligible_policy(pol):
+    reason = _paged_reason(q, k_pages, v_pages, pol, cfg)
+    if reason != "fused":
+        _explain("paged_attention", pol.name,
+                 (tuple(q.shape), tuple(k_pages.shape)), reason)
         return False
+    return True
+
+
+def _paged_reason(q, k_pages, v_pages, pol, cfg) -> str:
+    """The paged decode-attention rule walk: ``"fused"`` when eligible,
+    else the declining rule's explain slug."""
+    if not cfg.enabled or not cfg.paged_attention:
+        return "hatch-disabled"
+    if not eligible_policy(pol):
+        return _policy_rule(pol)
     if not (cfg.force or jax.default_backend() == "tpu"):
-        return False
+        return "off-backend"
     if q.ndim != 3 or k_pages.ndim != 4 or v_pages.ndim != 4:
-        return False
+        return "shape-unsupported"
     B, H, hd = q.shape
     NP, ps, Hkv, hd2 = k_pages.shape
     if (hd2 != hd or v_pages.shape[:3] != k_pages.shape[:3]
             or Hkv == 0 or H % Hkv):
-        return False
+        return "shape-unsupported"
     from . import shmap
     _, plan = _mesh_plan_or_decline(
         lambda mesh: shmap.paged_plan(q.shape, k_pages.shape, mesh), cfg)
     if plan == "decline":
-        return False
+        return "mesh-declined"
     from .tcec_paged_attention import paged_vmem_bytes
     from .tcec_matmul import VMEM_BUDGET
-    return paged_vmem_bytes(1, ps, H // Hkv, hd, v_pages.shape[3],
-                            pol) <= VMEM_BUDGET
+    if paged_vmem_bytes(1, ps, H // Hkv, hd, v_pages.shape[3],
+                        pol) > VMEM_BUDGET:
+        return "vmem-budget"
+    return "fused"
 
 
 def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
@@ -386,6 +453,7 @@ def attention_decode(q, k_pages, v_pages, block_tables, lengths, *, policy,
     ident = (pol.name, B, Hkv, H // Hkv, block_tables.shape[1], ps)
     if mesh is not None:
         if plan == "decline":         # eligibility screens this; graceful
+            _explain("paged_attention", pol.name, ident[1:], "mesh-declined")
             return None
         return _guarded(
             "paged_attention", ident, cfg,
@@ -418,12 +486,24 @@ def epilogue_eligible(policy: PrecisionPolicy, cfg=None) -> bool:
     Declines under an installed GSPMD mesh: the fused path flattens
     ``(B, S, D) -> (B*S, D)``, and that reshape replicates a sharded
     batch dim under GSPMD — the unfused pdot path dispatches through the
-    ``shard_map`` wrapper instead (same GEMMs, unfused epilogue)."""
+    ``shard_map`` wrapper instead (same GEMMs, unfused epilogue).
+
+    Records every decision (shape-independent, so the bucket is empty);
+    the GEMM underneath still records its own matmul decision."""
     from repro.parallel import ctx
     cfg = _cfg(cfg)
-    return (cfg.enabled and cfg.fuse_epilogue and eligible_policy(policy)
-            and ctx.current_mesh() is None
-            and (cfg.force or jax.default_backend() == "tpu"))
+    if not cfg.enabled or not cfg.fuse_epilogue:
+        rule = "hatch-disabled"
+    elif not eligible_policy(policy):
+        rule = _policy_rule(policy)
+    elif ctx.current_mesh() is not None:
+        rule = "mesh-declined"
+    elif not (cfg.force or jax.default_backend() == "tpu"):
+        rule = "off-backend"
+    else:
+        rule = "fused"
+    _explain("epilogue", policy.name, (), rule)
+    return rule == "fused"
 
 
 def tuned_block(M: int, N: int, K: int, policy_name: str,

@@ -46,12 +46,14 @@ shape: block lookups go to the ``backend/shmap/...`` cache namespace
 keyed by the per-shard problem (``kernels/tuning.py``), since the tile
 the kernel actually runs is the shard.
 
-The :data:`CALLS` counters increment once per wrapped dispatch at trace
-time — the acceptance hook tests use to assert that a mesh-installed
-program really routed through the kernels.
+The :func:`counters` view increments once per wrapped dispatch at trace
+time (the ``kernels/shmap/calls`` registry counter in
+:mod:`repro.obs.metrics`) — the acceptance hook tests use to assert
+that a mesh-installed program really routed through the kernels.
 """
 from __future__ import annotations
 
+from collections.abc import Mapping
 from dataclasses import dataclass
 
 import jax
@@ -60,17 +62,62 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro import numerics
+from repro.obs import metrics as _metrics
 
 # Cache namespace for per-shard tuning keys: ``backend/shmap/...``.
 NAMESPACE = "shmap"
 
-# Trace-time dispatch counters (tests assert mesh programs route here).
-CALLS = {"matmul": 0, "attention": 0, "paged": 0}
+#: the wrapped kernels (label values of ``kernels/shmap/calls``)
+KERNELS = ("matmul", "attention", "paged")
+
+
+def _bump(kernel: str):
+    _metrics.counter("kernels/shmap/calls").inc(kernel=kernel)
+
+
+def counters() -> dict[str, int]:
+    """Trace-time sharded-dispatch counts, ``{kernel: calls}`` (zeroes
+    included).  Backed by the ``kernels/shmap/calls`` registry counter,
+    so ``repro.obs.snapshot()`` carries the same numbers."""
+    c = _metrics.counter("kernels/shmap/calls")
+    return {k: int(c.value(kernel=k)) for k in KERNELS}
+
+
+def reset_counters():
+    _metrics.counter("kernels/shmap/calls").reset()
+
+
+class _CallsView(Mapping):
+    """Read-only live view backing the deprecated :data:`CALLS` dict."""
+
+    def __getitem__(self, key):
+        if key not in KERNELS:
+            raise KeyError(key)
+        return counters()[key]
+
+    def __iter__(self):
+        return iter(KERNELS)
+
+    def __len__(self):
+        return len(KERNELS)
+
+    def __repr__(self):
+        return repr(counters())
+
+
+def __getattr__(name):
+    if name == "CALLS":
+        numerics._deprecated("repro.kernels.shmap.CALLS",
+                             "repro.kernels.shmap.counters()")
+        return _CallsView()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def reset_calls():
-    for k in CALLS:
-        CALLS[k] = 0
+    """Deprecated: use :func:`reset_counters`."""
+    numerics._deprecated("repro.kernels.shmap.reset_calls()",
+                         "repro.kernels.shmap.reset_counters()")
+    reset_counters()
 
 
 def _cfg(cfg) -> numerics.NumericsConfig:
@@ -346,7 +393,7 @@ def sharded_matmul(a, b, *, policy: str, mesh, cfg=None,
             out = jax.lax.psum(out, plan.psum_axes)
         return out
 
-    CALLS["matmul"] += 1
+    _bump("matmul")
     return shard_map(body, mesh=mesh, in_specs=(plan.a_spec, plan.b_spec),
                      out_specs=plan.out_spec, check_rep=False)(a, b)
 
@@ -400,7 +447,7 @@ def sharded_attention(q, k, v, q_pos=None, k_pos=None, *, policy: str,
                               causal=causal, window=w, softcap=softcap,
                               block=block, interpret=interpret)
 
-    CALLS["attention"] += 1
+    _bump("attention")
     return shard_map(
         body, mesh=mesh,
         in_specs=(plan.q_spec, plan.k_spec, plan.v_spec, plan.qp_spec,
@@ -446,7 +493,7 @@ def sharded_paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                                     window=w, softcap=softcap,
                                     pages_per_step=g, interpret=interpret)
 
-    CALLS["paged"] += 1
+    _bump("paged")
     return shard_map(
         body, mesh=mesh,
         in_specs=(plan.q_spec, plan.pool_spec, plan.pool_spec, plan.bt_spec,

@@ -126,6 +126,8 @@ def main():
                          "per shard via shard_map (0 = no mesh; see "
                          "docs/parallel.md)")
     numerics.add_cli_overrides(ap)
+    from repro import obs
+    obs.add_cli_flags(ap)
     args = ap.parse_args()
 
     import contextlib
@@ -136,7 +138,7 @@ def main():
         mesh = make_host_mesh(model=args.mesh_model)
         print(f"mesh: {dict(mesh.shape)}", flush=True)
         mesh_scope = ctx.use_mesh(mesh)
-    with numerics.cli_context(args), mesh_scope:
+    with numerics.cli_context(args), mesh_scope, obs.cli_session(args):
         _main(args)
 
 

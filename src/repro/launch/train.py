@@ -37,9 +37,11 @@ def main():
                          "kernel dispatch then routes through the "
                          "shard_map wrapper (see docs/parallel.md)")
     numerics.add_cli_overrides(ap)
+    from repro import obs
+    obs.add_cli_flags(ap)
     args = ap.parse_args()
 
-    with numerics.cli_context(args):
+    with numerics.cli_context(args), obs.cli_session(args):
         _main(args)
 
 

@@ -155,6 +155,14 @@ ENV_VARS: dict[str, EnvVar] = {v.name: v for v in [
            "XLA term-expansion path and quarantines that (backend, kernel, "
            "shape-bucket) key for a cooldown (kernels/guard.py).  0 lets "
            "kernel errors propagate (debugging).", field="guard"),
+    EnvVar("REPRO_MONITOR", "bool", False,
+           "Numerics-health monitors: sampled per-contraction probes of "
+           "the paper's underflow-risk indicators (correction-term "
+           "underflow fractions, operand exponent range vs the policy's "
+           "safe band), recorded into the repro.obs metrics registry "
+           "(obs/numerics_health.py).  Off by default — probes add "
+           "side computation per monitored contraction.",
+           field="monitor"),
     EnvVar("REPRO_FAULTS", "str", "",
            "Fault-injection plan for chaos testing, e.g. "
            "'pool.alloc@0:1;decode.slow@every=4' (repro.faults; empty = "
@@ -233,6 +241,8 @@ class NumericsConfig:
     paged_block: int | None = None  # pages-per-step override
     shard_map: bool = True          # mesh dispatch via kernels/shmap.py
     guard: bool = True              # circuit-breaker guarded dispatch
+    # -- observability ------------------------------------------------
+    monitor: bool = False           # numerics-health probes (repro.obs)
     # -- autotuning ---------------------------------------------------
     tune: str = "auto"              # "auto" | "force" | "off"
     tune_cache: str = _DEFAULT_TUNE_CACHE
@@ -282,6 +292,7 @@ class NumericsConfig:
                                           environ),
             shard_map=env_value("REPRO_SHARD_MAP", environ),
             guard=env_value("REPRO_GUARD", environ),
+            monitor=env_value("REPRO_MONITOR", environ),
             tune=tune,
             tune_cache=env_value("REPRO_TUNE_CACHE", environ),
             keep_bf16_dots=env_value("REPRO_KEEP_BF16_DOTS", environ),

@@ -1,0 +1,147 @@
+"""Dispatch explainability: *why* did a contraction (not) take the kernel?
+
+Every trace-time routing decision in ``kernels/dispatch.py`` — for the
+GEMM, flash-attention, and paged decode-attention kernels plus the
+epilogue hook — records which rule accepted or declined it, keyed like
+the circuit breaker: ``(backend, kernel, policy, shape-bucket)``.  The
+rule slugs below name the numbered dispatch rules of docs/kernels.md and
+the decision tree in docs/architecture.md (tests pin the mapping), so
+``repro.obs.explain()`` replaces "add prints to dispatch.py" as the way
+to answer "why is this shape on the XLA fallback?".
+
+Decisions are recorded at *trace* time: a jitted caller contributes one
+decision per (function, shape, config-epoch) trace, not per execution.
+Counts also land in the metrics registry (``kernels/dispatch/route`` and
+``kernels/dispatch/decline`` counters), so snapshots carry the totals
+even after :func:`reset`.
+"""
+from __future__ import annotations
+
+import threading
+
+from . import metrics
+
+#: rule slug -> human explanation.  "fused" is the acceptance; everything
+#: else names the eligibility rule that declined to the XLA fallback.
+RULES = {
+    "fused": "routed to the fused Pallas TCEC kernel",
+    "plain-policy": "plain policy (fp32/bf16): a single XLA dot, nothing "
+                    "to correct or fuse (rule 1)",
+    "policy-ineligible": "not a bf16 split policy — the fp16 reproduction "
+                         "policies model CUDA Tensor Cores, which the "
+                         "bf16 MXU kernel cannot (rule 1)",
+    "hatch-disabled": "an escape hatch is off: REPRO_DISABLE_PALLAS / "
+                      "REPRO_DISABLE_FLASH_ATTN / REPRO_DISABLE_PAGED_ATTN "
+                      "/ fuse_epilogue (rule 5)",
+    "off-backend": "backend is not TPU and force is unset (rule 4)",
+    "shape-unsupported": "contraction does not map onto the kernel's "
+                         "canonical (B?, M, K) @ (B?, K, N) layout "
+                         "(rule 2)",
+    "below-min-dim": "a problem dim is under min_dim — 128-padding would "
+                     "cost more than fusion wins (rule 3)",
+    "mesh-declined": "GSPMD mesh installed but the shard_map knob is off "
+                     "or kernels/shmap.py has no per-shard spec for these "
+                     "shapes (rule 6)",
+    "vmem-budget": "even the minimum kernel block would not fit the VMEM "
+                   "budget (extreme-rep GQA)",
+    "breaker-open": "the circuit breaker has this key quarantined after "
+                    "repeated kernel failures (kernels/guard.py)",
+    "kernel-failure": "the kernel raised and guarded dispatch fell back "
+                      "(kernels/guard.py counts the failure)",
+}
+
+_LOCK = threading.Lock()
+_DECISIONS: dict[tuple, dict] = {}
+
+#: bound on distinct decision keys (shape-sweep benchmarks); overflow is
+#: counted, never silent.
+MAX_KEYS = 4096
+
+
+def record(kernel: str, policy: str, bucket: tuple, rule: str):
+    """Record one routing decision.  ``bucket`` is the shape-bucket part
+    of the key (the guard ident without the policy)."""
+    if rule not in RULES:
+        raise ValueError(f"unknown dispatch rule {rule!r}; "
+                         f"known: {sorted(RULES)}")
+    import jax
+    backend = jax.default_backend()
+    fused = rule == "fused"
+    key = (backend, kernel, str(policy)) + tuple(
+        str(b) for b in tuple(bucket))
+    with _LOCK:
+        rules = _DECISIONS.get(key)
+        if rules is None:
+            if len(_DECISIONS) >= MAX_KEYS:
+                metrics.inc("kernels/dispatch/explain_overflow")
+            else:
+                rules = _DECISIONS[key] = {}
+        if rules is not None:
+            # per-rule counts: a key may flip route over its lifetime
+            # (breaker opens, config scopes) — keep every decision
+            rules[rule] = rules.get(rule, 0) + 1
+    metrics.counter("kernels/dispatch/route").inc(
+        kernel=kernel, route="fused" if fused else "fallback")
+    if not fused:
+        metrics.counter("kernels/dispatch/decline").inc(
+            kernel=kernel, rule=rule)
+
+
+class Report:
+    """Materialized view of every recorded decision."""
+
+    def __init__(self, entries: list[dict]):
+        self.entries = entries
+
+    @property
+    def n_fused(self) -> int:
+        return sum(e["count"] for e in self.entries
+                   if e["rule"] == "fused")
+
+    @property
+    def n_fallback(self) -> int:
+        return sum(e["count"] for e in self.entries
+                   if e["rule"] != "fused")
+
+    def fallbacks(self) -> list[dict]:
+        return [e for e in self.entries if e["rule"] != "fused"]
+
+    def lines(self) -> list[str]:
+        out = []
+        for e in sorted(self.entries,
+                        key=lambda e: (-e["count"], e["key"])):
+            label = ("fused" if e["rule"] == "fused"
+                     else f"fallback({e['rule']})")
+            out.append(f"{e['key']}: {label} x{e['count']}")
+        return out
+
+    def __str__(self):
+        if not self.entries:
+            return "dispatch explain: no decisions recorded"
+        head = (f"dispatch explain: {self.n_fused} fused / "
+                f"{self.n_fallback} fallback decisions")
+        return "\n".join([head] + ["  " + ln for ln in self.lines()])
+
+
+def report(reset: bool = False) -> Report:
+    """Everything recorded so far (optionally clearing the table)."""
+    with _LOCK:
+        entries = [{"key": "/".join(key), "backend": key[0],
+                    "kernel": key[1], "policy": key[2],
+                    "bucket": key[3:], "rule": rule, "count": count}
+                   for key, rules in _DECISIONS.items()
+                   for rule, count in rules.items()]
+        if reset:
+            _DECISIONS.clear()
+    return Report(entries)
+
+
+def decisions() -> dict[str, dict]:
+    """Raw ``{key: {rule: count}}`` view (keys "/"-joined)."""
+    with _LOCK:
+        return {"/".join(k): dict(v) for k, v in _DECISIONS.items()}
+
+
+def reset():
+    with _LOCK:
+        _DECISIONS.clear()

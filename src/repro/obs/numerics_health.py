@@ -1,0 +1,178 @@
+"""Runtime numerics-health monitors: the paper's underflow-risk
+indicators, live per contraction instead of offline per figure.
+
+Fig. 8/11 of the source paper show the correction scheme silently losing
+accuracy when operand exponents drift low: the residual ``dA = A - A_hi``
+(scaled by ``2^scale_bits``, Eq. 18) lands in the low-precision format's
+(sub)normal band, and correction-term products ``dA·B`` / ``A·dB``
+underflow the accumulation.  The repo could only measure this offline
+(``core/theory.py`` closed forms, the fig8 bench); these probes estimate
+the same indicators on *live traffic*:
+
+  * fraction of residuals whose scaled low-precision cast fully
+    underflows (``u``) or lands subnormal (``gu``) — the empirical
+    counterpart of ``theory.p_underflow`` / ``p_underflow_gradual``;
+  * fraction of (sampled) correction-term products ``|dA_scaled|·|B_hi|``
+    below the format's smallest normal;
+  * operand exponent range vs :func:`safe_exponent_range` — the band of
+    unbiased f32 exponents for which the closed-form P_{u+gu} is exactly
+    zero and the scaled residual cannot overflow.
+
+NB on flush-to-zero backends (XLA CPU flushes f32 subnormals) a bf16
+residual that would land subnormal reads as exactly zero *before* the
+probe sees it — bf16 shares f32's exponent range, so its whole
+(sub)normal-underflow band lies inside the flushed region and ``u`` /
+``gu`` stay at 0 there.  The exponent-range indicator (``oob`` vs
+:func:`safe_exponent_range`) is backend-independent and is the robust
+signal for bf16 policies; the fp16 policies (min normal ``2^-14``)
+show ``gu`` directly on any backend.
+
+Default **off** (``NumericsConfig.monitor`` / ``REPRO_MONITOR``).  When
+on, :func:`observe` is called from the contraction chokepoints in
+``core/policy.py`` (``pdot`` / ``policy_mm`` / ``policy_bmm``, forward
+operands — the backward GEMMs run inside ``custom_vjp`` and are not
+probed).  The probes compute side values only — the contraction's own
+graph is untouched, so outputs stay token-identical (test-pinned) — and
+deliver results at *runtime* through ``jax.debug.callback`` into the
+``numerics/monitor/*`` registry metrics.  With the knob off no probe
+ops enter the graph, so lowering is byte-identical to pre-monitor.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import theory
+from . import metrics
+
+_FMT = {"bfloat16": theory.BF16, "float16": theory.FP16}
+_MAX_E = {"bfloat16": 127, "float16": 15}     # max unbiased exponent
+
+#: an observed (gradual-)underflow fraction above this raises the
+#: ``numerics/monitor/*_risk`` counters
+RISK_THRESHOLD = 0.01
+
+#: per-operand sample size for the product probe (|dA|x|B| outer product
+#: over strided subsamples: 64x64 = 4096 products per probed contraction)
+PRODUCT_SAMPLE = 64
+
+_SAMPLE_LOCK = threading.Lock()
+_sample_every = 1
+_calls = 0
+
+
+def configure(sample_every: int = 1):
+    """Probe every Nth monitored contraction (trace-time sampling; a
+    cached jit trace keeps whatever the counter decided when it was
+    traced)."""
+    global _sample_every
+    _sample_every = max(1, int(sample_every))
+
+
+@functools.lru_cache(maxsize=None)
+def safe_exponent_range(dtype: str, scale_bits: int) -> tuple[int, int]:
+    """Unbiased f32 operand exponents for which the residual cast is
+    exact: the closed form ``theory.p_underflow_gradual(e, fmt,
+    scale_bits)`` is 0.0 at the low end, and the scaled residual cannot
+    exceed the format's max exponent at the high end."""
+    fmt = _FMT[dtype]
+    lo = next(e for e in range(-148, 129)
+              if theory.p_underflow_gradual(e, fmt, scale_bits) == 0.0)
+    hi = _MAX_E[dtype] + fmt.mant + 1 - scale_bits
+    return lo, hi
+
+
+def _subsample(flat, n: int):
+    flat = flat.reshape(-1)
+    stride = max(1, int(flat.shape[0]) // n)
+    return flat[::stride][:n]
+
+
+def _operand_probe(x, policy):
+    """In-graph probe values for one operand: underflow fractions of the
+    first (dominant) residual's scaled cast, exponent extrema, and the
+    fraction of nonzero elements outside the policy's safe range.
+    Returns ``(stats, scaled_resid_f32, hi_f32)``."""
+    fmt = _FMT[policy.dtype]
+    lo_e, hi_e = safe_exponent_range(policy.dtype, policy.scale_bits)
+    xf = x.astype(jnp.float32)
+    hi = xf.astype(policy.jdtype).astype(jnp.float32)
+    resid = xf - hi                                  # true correction term
+    scaled = ((resid * jnp.float32(2.0 ** policy.scale_bits))
+              .astype(policy.jdtype).astype(jnp.float32))
+    nz = resid != 0
+    n = jnp.maximum(jnp.sum(nz), 1)
+    tiny = jnp.float32(2.0 ** -(fmt.bias - 1))       # smallest lp normal
+    u = jnp.sum((scaled == 0) & nz) / n
+    gu = jnp.sum((jnp.abs(scaled) < tiny) & nz) / n  # includes full u
+    ax = jnp.abs(xf)
+    nzx = ax > 0
+    one = jnp.float32(1.0)
+    ex = jnp.floor(jnp.log2(jnp.where(nzx, ax, one)))
+    nx = jnp.maximum(jnp.sum(nzx), 1)
+    oob = jnp.sum(((ex < lo_e) | (ex > hi_e)) & nzx) / nx
+    zero = jnp.float32(0.0)
+    stats = {"u": u, "gu": gu, "oob": oob,
+             "emin": jnp.min(jnp.where(nzx, ex, zero)),
+             "emax": jnp.max(jnp.where(nzx, ex, zero))}
+    return stats, scaled, hi
+
+
+def _product_underflow(scaled_resid, other_hi, tiny):
+    """Fraction of sampled correction-term products below the format's
+    smallest normal — the term that silently vanishes from the corrected
+    accumulation (paper fig. 8)."""
+    sa = _subsample(jnp.abs(scaled_resid), PRODUCT_SAMPLE)
+    sb = _subsample(jnp.abs(other_hi), PRODUCT_SAMPLE)
+    prod = sa[:, None] * sb[None, :]
+    nz = prod != 0
+    n = jnp.maximum(jnp.sum(nz), 1)
+    return jnp.sum((prod < tiny) & nz) / n
+
+
+def _record(u, gu, oob, pf, emin, emax, *, site, policy):
+    """Host-side sink (runs per execution via jax.debug.callback)."""
+    m = metrics
+    m.counter("numerics/monitor/probes").inc(site=site, policy=policy)
+    m.observe("numerics/monitor/underflow_frac", float(gu),
+              buckets=m.FRACTION_BUCKETS, policy=policy)
+    m.observe("numerics/monitor/product_underflow_frac", float(pf),
+              buckets=m.FRACTION_BUCKETS, policy=policy)
+    m.observe("numerics/monitor/exponent_oob_frac", float(oob),
+              buckets=m.FRACTION_BUCKETS, policy=policy)
+    m.gauge("numerics/monitor/exponent_min").set_min(float(emin),
+                                                     policy=policy)
+    m.gauge("numerics/monitor/exponent_max").set_max(float(emax),
+                                                     policy=policy)
+    if float(gu) > RISK_THRESHOLD or float(oob) > 0.0:
+        m.counter("numerics/monitor/underflow_risk").inc(site=site,
+                                                         policy=policy)
+    if float(pf) > RISK_THRESHOLD:
+        m.counter("numerics/monitor/product_underflow_risk").inc(
+            site=site, policy=policy)
+
+
+def observe(a, b, policy, *, site: str = "pdot"):
+    """Probe one contraction's operands (split policies only).  Pure
+    observation: emits side computations plus one debug callback; the
+    contraction itself is untouched."""
+    global _calls
+    with _SAMPLE_LOCK:
+        _calls += 1
+        if (_calls - 1) % _sample_every:
+            return
+    fmt = _FMT[policy.dtype]
+    tiny = jnp.float32(2.0 ** -(fmt.bias - 1))
+    sa, ra, ha = _operand_probe(a, policy)
+    sb, rb, hb = _operand_probe(b, policy)
+    pf = jnp.maximum(_product_underflow(ra, hb, tiny),
+                     _product_underflow(rb, ha, tiny))
+    jax.debug.callback(
+        functools.partial(_record, site=site, policy=policy.name),
+        jnp.maximum(sa["u"], sb["u"]), jnp.maximum(sa["gu"], sb["gu"]),
+        jnp.maximum(sa["oob"], sb["oob"]), pf,
+        jnp.minimum(sa["emin"], sb["emin"]),
+        jnp.maximum(sa["emax"], sb["emax"]))

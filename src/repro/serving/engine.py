@@ -42,7 +42,9 @@ fault-injectable via :mod:`repro.faults`.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +52,8 @@ import numpy as np
 
 from repro import faults, numerics
 from repro.models import get_model
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import current as _current_tracer
 from . import sampling
 from .errors import (EngineOverloaded, FinishReason, RequestRejected,
                      RequestResult)
@@ -57,6 +61,27 @@ from .kv_cache import (DEFAULT_PAGE_SIZE, PagePool, inverse_permutation,
                        permute_pages, write_prompt_pages)
 from .sampling import SamplingParams
 from .scheduler import Request, RequestState, Scheduler
+
+
+# live engines, summed into repro.obs snapshots at read time (weak refs:
+# registering here never keeps a dropped engine's cache pools alive)
+_LIVE_ENGINES: "weakref.WeakSet[Engine]" = weakref.WeakSet()
+
+
+def _engines_source() -> dict:
+    out: dict[str, int] = {}
+    for eng in list(_LIVE_ENGINES):
+        stats = {**eng._stats, "clock": eng.clock,
+                 "prefills": eng.n_prefills,
+                 "decode_steps": eng.n_decode_steps,
+                 "preemptions": eng.sched.n_preemptions,
+                 "parks": eng.sched.n_parks}
+        for k, v in stats.items():
+            out[k] = out.get(k, 0) + int(v)
+    return out
+
+
+_obs_metrics.register_source("serving/engine", _engines_source)
 
 
 def _pool_spec(shape, mesh):
@@ -160,6 +185,7 @@ class Engine:
         self._prefill = jax.jit(lambda p, toks: model.prefill(p, toks))
         self.n_decode_steps = 0
         self.n_prefills = 0
+        _LIVE_ENGINES.add(self)
 
     def _pool_shardings(self):
         """Multi-device pool layout: shard each page pool's KV-head dim
@@ -187,6 +213,37 @@ class Engine:
         if self.mesh is not None:
             scope.enter_context(_pctx.use_mesh(self.mesh))
         return scope
+
+    # ------------------------------------------------------- observability
+    #
+    # Everything below is gated on an active repro.obs tracer: with no
+    # trace() context installed there are no spans, no wall-clock reads,
+    # and no histogram writes — the engine's hot loop is unchanged (the
+    # overhead test pins zero extra jitted traces with tracing off).
+
+    def _span(self, name: str, **args):
+        """A tracer span around one engine phase, or a no-op context
+        yielding a throwaway args dict when tracing is off."""
+        tr = _current_tracer()
+        if tr is None:
+            return contextlib.nullcontext(dict(args))
+        return tr.span(name, cat="engine", **args)
+
+    @staticmethod
+    def _observe_latency(name: str, seconds: float):
+        _obs_metrics.observe(f"serving/latency/{name}", seconds)
+
+    def _trace_request_end(self, req: Request):
+        tr = _current_tracer()
+        if tr is not None:
+            tr.async_end("request", req.rid, finish=req.finish_reason,
+                         tokens=len(req.out))
+
+    def _trace_preempt(self, req: Request):
+        tr = _current_tracer()
+        if tr is not None:
+            tr.async_instant("preempted", req.rid,
+                             n_preemptions=req.n_preemptions)
 
     # ------------------------------------------------------------ intake
 
@@ -225,6 +282,11 @@ class Engine:
         if deadline is not None:
             req.deadline = self.clock + deadline
         self._requests[req.rid] = req
+        tr = _current_tracer()
+        if tr is not None:
+            req.t_enqueue = tr.now()
+            tr.async_begin("request", req.rid, prompt_len=len(prompt),
+                           max_tokens=params.max_tokens)
         return req.rid
 
     # ----------------------------------------------------------- prefill
@@ -239,7 +301,16 @@ class Engine:
             self._stats["length_caps"] += 1
             req.finish_reason = FinishReason.LENGTH_CAP.value
             self.sched.drop(req)
+            self._trace_request_end(req)
         admitted = self.sched.admit()
+        tr = _current_tracer()
+        if tr is not None:
+            now = tr.now()
+            for req in admitted:
+                tr.async_instant("admitted", req.rid, clock=self.clock)
+                if req.t_enqueue is not None and req.n_preemptions == 0:
+                    self._observe_latency("queue_wait_s",
+                                          now - req.t_enqueue)
         ps = self.pool.page_size
         # same padded length -> one batched prefill call
         groups: dict[int, list[Request]] = {}
@@ -248,30 +319,32 @@ class Engine:
             padded = max(1, -(-len(seq) // ps)) * ps
             groups.setdefault(padded, []).append(req)
         for padded, reqs in sorted(groups.items()):
-            toks = np.zeros((len(reqs), padded), np.int32)
-            for i, req in enumerate(reqs):
-                toks[i, :len(req.full_sequence)] = req.full_sequence
-            try:
-                faults.raise_if("prefill")
-                logits, kv = self._prefill(self.params, jnp.asarray(toks))
-            except Exception as exc:   # noqa: BLE001 — rolled back below
-                self._on_prefill_failure(reqs, exc)
-                continue
-            self.n_prefills += 1
-            n_prompt_pages = padded // ps
-            pages = np.asarray([req.pages[:n_prompt_pages] for req in reqs],
-                               np.int32)
-            self.pools = write_prompt_pages(self.pools, kv,
-                                            jnp.asarray(pages))
-            for i, req in enumerate(reqs):
-                plen = len(req.full_sequence)
-                self.lengths[req.slot] = plen
-                self._sync_slot(req)
-                row = jnp.asarray(logits[i, plen - 1,
-                                         :self.cfg.vocab_size], jnp.float32)
-                req.key, sub = jax.random.split(req.key)
-                tok = int(sampling.sample_one(row, req.params, sub))
-                self._accept_token(req, tok)
+            with self._span("prefill", batch=len(reqs), padded=padded):
+                toks = np.zeros((len(reqs), padded), np.int32)
+                for i, req in enumerate(reqs):
+                    toks[i, :len(req.full_sequence)] = req.full_sequence
+                try:
+                    faults.raise_if("prefill")
+                    logits, kv = self._prefill(self.params, jnp.asarray(toks))
+                except Exception as exc:  # noqa: BLE001 — rolled back below
+                    self._on_prefill_failure(reqs, exc)
+                    continue
+                self.n_prefills += 1
+                n_prompt_pages = padded // ps
+                pages = np.asarray([req.pages[:n_prompt_pages]
+                                    for req in reqs], np.int32)
+                self.pools = write_prompt_pages(self.pools, kv,
+                                                jnp.asarray(pages))
+                for i, req in enumerate(reqs):
+                    plen = len(req.full_sequence)
+                    self.lengths[req.slot] = plen
+                    self._sync_slot(req)
+                    row = jnp.asarray(logits[i, plen - 1,
+                                             :self.cfg.vocab_size],
+                                      jnp.float32)
+                    req.key, sub = jax.random.split(req.key)
+                    tok = int(sampling.sample_one(row, req.params, sub))
+                    self._accept_token(req, tok)
 
     # a request whose prefill fails this many times finishes with
     # finish_reason="error" instead of retrying forever
@@ -318,6 +391,14 @@ class Engine:
 
     def _accept_token(self, req: Request, tok: int) -> bool:
         """Host-side completion logic; returns True while still running."""
+        tr = _current_tracer()
+        if tr is not None and req.t_enqueue is not None:
+            now = tr.now()
+            if req.t_last_token is None:
+                self._observe_latency("ttft_s", now - req.t_enqueue)
+            else:
+                self._observe_latency("tpot_s", now - req.t_last_token)
+            req.t_last_token = now
         if tok in req.params.stop_tokens:
             self._finish(req, FinishReason.STOP)
             return False
@@ -334,6 +415,7 @@ class Engine:
         slot = req.slot
         self.sched.finish(req)
         self._clear_slot(slot)
+        self._trace_request_end(req)
 
     # ------------------------------------------------------------ decode
 
@@ -365,15 +447,18 @@ class Engine:
                         # — recompute-preemption of self, not a failure
                         self.sched.preempt(req)
                         self._clear_slot(slot)
+                        self._trace_preempt(req)
                     for rid, s in before.items():
                         r = self._requests[rid]
                         if r.slot is None and rid != req.rid:
                             self._clear_slot(s)
+                            self._trace_preempt(r)
                     continue
                 for rid, slot in before.items():
                     r = self._requests[rid]
                     if r.slot is None:          # got preempted: mask slot
                         self._clear_slot(slot)
+                        self._trace_preempt(r)
                 self.block_tables[req.slot] = 0
                 self.block_tables[req.slot, :len(req.pages)] = req.pages
 
@@ -395,42 +480,48 @@ class Engine:
         running = [r for r in self.sched.running.values()]
         if not running:
             return
-        args = (self.params, jnp.asarray(self.block_tables),
-                jnp.asarray(self.lengths), jnp.asarray(self.next_tok),
-                jnp.asarray(self.temps), jnp.asarray(self.topks),
-                jnp.asarray(self.topps))
-        prev_keys = self.keys        # NOT donated: reusable for the re-run
-        toks, finite, pools, keys = self._decode(
-            args[0], self.pools, *args[1:], prev_keys,
-            jnp.asarray(self._poison_mask()))
-        self.n_decode_steps += 1
-        finite = np.asarray(finite)
-        bad = [r for r in running if not finite[r.slot]]
-        if bad and self.numerics_config.guard:
-            # one-shot re-run of the whole step under the XLA-fallback
-            # numerics scope.  Safe to replay against the post-step pools:
-            # the step only writes the current position's K/V, which the
-            # re-run overwrites before reading.  prev_keys keeps every
-            # fault-free slot's sampling stream from advancing twice.
-            self._stats["guard_trips"] += 1
-            self._stats["fallback_reruns"] += 1
-            with numerics.use(self._fallback_numerics):
-                toks, finite, pools, keys = self._decode(
-                    args[0], pools, *args[1:], prev_keys,
-                    jnp.asarray(self._poison_mask()))
+        with self._span("decode", batch=len(running)):
+            args = (self.params, jnp.asarray(self.block_tables),
+                    jnp.asarray(self.lengths), jnp.asarray(self.next_tok),
+                    jnp.asarray(self.temps), jnp.asarray(self.topks),
+                    jnp.asarray(self.topps))
+            prev_keys = self.keys    # NOT donated: reusable for the re-run
+            toks, finite, pools, keys = self._decode(
+                args[0], self.pools, *args[1:], prev_keys,
+                jnp.asarray(self._poison_mask()))
+            self.n_decode_steps += 1
             finite = np.asarray(finite)
-        self.pools, self.keys = pools, keys
-        toks = np.asarray(toks)
-        for req in running:
-            if not finite[req.slot]:
-                # the fallback tripped too (or the guard is off): fail
-                # THIS request; its neighbours in the batch are unharmed
-                self._stats["numerics_errors"] += 1
-                self._finish(req, FinishReason.ERROR)
-                continue
-            self.lengths[req.slot] += 1      # its input token is now cached
-            req.key = self.keys[req.slot]
-            self._accept_token(req, int(toks[req.slot]))
+            bad = [r for r in running if not finite[r.slot]]
+            if bad and self.numerics_config.guard:
+                # one-shot re-run of the whole step under the XLA-fallback
+                # numerics scope.  Safe to replay against the post-step
+                # pools: the step only writes the current position's K/V,
+                # which the re-run overwrites before reading.  prev_keys
+                # keeps every fault-free slot's sampling stream from
+                # advancing twice.
+                self._stats["guard_trips"] += 1
+                self._stats["fallback_reruns"] += 1
+                tr = _current_tracer()
+                if tr is not None:
+                    tr.instant("fallback-rerun", cat="engine",
+                               slots=[r.slot for r in bad])
+                with numerics.use(self._fallback_numerics):
+                    toks, finite, pools, keys = self._decode(
+                        args[0], pools, *args[1:], prev_keys,
+                        jnp.asarray(self._poison_mask()))
+                finite = np.asarray(finite)
+            self.pools, self.keys = pools, keys
+            toks = np.asarray(toks)
+            for req in running:
+                if not finite[req.slot]:
+                    # the fallback tripped too (or the guard is off): fail
+                    # THIS request; its batch neighbours are unharmed
+                    self._stats["numerics_errors"] += 1
+                    self._finish(req, FinishReason.ERROR)
+                    continue
+                self.lengths[req.slot] += 1  # its input token is now cached
+                req.key = self.keys[req.slot]
+                self._accept_token(req, int(toks[req.slot]))
 
     # ------------------------------------------------------------- drive
 
@@ -448,13 +539,14 @@ class Engine:
             self._stats["timeouts"] += 1
             req.finish_reason = FinishReason.TIMEOUT.value
             self.sched.drop(req)
+            self._trace_request_end(req)
 
     def step(self):
         """One engine iteration: tick the deadline clock, expire
         deadlines, admit + prefill, then one decode step for whatever is
         in flight — under the construction-time numerics and mesh
         scopes."""
-        with self._scopes():
+        with self._scopes(), self._span("engine.step") as sp:
             self.clock += 1
             spec = faults.poke("decode.slow")
             if spec is not None:         # injected slowdown: burn ticks
@@ -463,6 +555,10 @@ class Engine:
             self._admit_and_prefill()
             self._ensure_pages()
             self._decode_step()
+            # annotated at exit: the span args dict is live until then
+            sp["clock"] = self.clock
+            sp["occupancy"] = len(self.sched.running)
+            sp["waiting"] = len(self.sched.waiting)
 
     def run(self, prompts=None, params=None) -> dict[int, RequestResult]:
         """Convenience driver: optionally enqueue ``prompts`` (with one

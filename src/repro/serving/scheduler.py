@@ -61,6 +61,8 @@ class Request:
     finish_reason: str | None = None   # serving.errors.FinishReason value
     deadline: int | None = None        # engine-clock tick to finish by
     n_prefill_faults: int = 0          # failed prefill attempts (engine)
+    t_enqueue: float | None = None     # tracer clock at add (repro.obs)
+    t_last_token: float | None = None  # tracer clock at last accept
 
     @property
     def full_sequence(self) -> list[int]:

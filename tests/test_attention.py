@@ -355,10 +355,10 @@ def test_dispatch_under_mesh_routes_or_declines():
         ref = dispatch.attention(q, k, v, policy="tcec_bf16x6")
         assert ref is not None
         with ctx.use_mesh(mesh):
-            n0 = shmap.CALLS["attention"]
+            n0 = shmap.counters()["attention"]
             out = dispatch.attention(q, k, v, policy="tcec_bf16x6")
             assert out is not None                      # routed, not declined
-            assert shmap.CALLS["attention"] == n0 + 1   # via the wrapper
+            assert shmap.counters()["attention"] == n0 + 1   # via the wrapper
             np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
             # the knob restores the decline
             with numerics.use(shard_map=False):

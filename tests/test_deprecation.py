@@ -89,6 +89,29 @@ def test_old_surface_still_routes_dispatch():
     assert np.array_equal(np.asarray(y_old), np.asarray(y_new))
 
 
+def test_shmap_calls_warns_and_views_registry():
+    """The old ``shmap.CALLS`` dict survives as a read-only live view of
+    the registry counter behind :func:`shmap.counters`."""
+    from repro.kernels import shmap
+    with _one_deprecation("repro.kernels.shmap.counters"):
+        calls = shmap.CALLS
+    assert dict(calls) == shmap.counters()
+    before = shmap.counters()["matmul"]
+    shmap._bump("matmul")
+    assert calls["matmul"] == before + 1     # live, not a snapshot
+    with pytest.raises(KeyError):
+        calls["nope"]
+
+
+def test_shmap_reset_calls_warns_and_delegates():
+    from repro.kernels import shmap
+    shmap._bump("paged")
+    assert shmap.counters()["paged"] >= 1
+    with _one_deprecation("reset_counters"):
+        shmap.reset_calls()
+    assert shmap.counters() == {k: 0 for k in shmap.KERNELS}
+
+
 def test_internal_call_sites_are_warning_free():
     """The migrated internals must never touch a shim: a full dispatch
     round-trip (forced kernel + fallback) under ``error`` filters must not

@@ -14,7 +14,8 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ["README.md", "docs/api.md", "docs/architecture.md",
         "docs/numerics.md", "docs/kernels.md", "docs/parallel.md",
-        "docs/serving.md", "docs/robustness.md", "benchmarks/README.md"]
+        "docs/serving.md", "docs/robustness.md", "docs/observability.md",
+        "benchmarks/README.md"]
 EXAMPLES = ["examples/numerics_tour.py", "examples/shard_tour.py"]
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 

@@ -347,10 +347,10 @@ def test_paged_dispatch_under_mesh_routes_or_declines():
         with ctx.use_mesh(mesh):
             assert dispatch.attention_decode_eligible(
                 q, kp, vp, policy="tcec_bf16x6")
-            n0 = shmap.CALLS["paged"]
+            n0 = shmap.counters()["paged"]
             out = dispatch.attention_decode(q, kp, vp, bt, lengths,
                                             policy="tcec_bf16x6")
-            assert out is not None and shmap.CALLS["paged"] == n0 + 1
+            assert out is not None and shmap.counters()["paged"] == n0 + 1
             np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
             with numerics.use(shard_map=False):
                 assert not dispatch.attention_decode_eligible(

@@ -122,10 +122,10 @@ def test_matmul_routes_through_shard_map_under_mesh():
     with numerics.use(force=True, interpret=True, min_dim=0,
                       block=(128, 128, 128)):
         ref = repro.matmul(a, b, policy="tcec_bf16x6")
-        n0 = shmap.CALLS["matmul"]
+        n0 = shmap.counters()["matmul"]
         with ctx.use_mesh(_one_device_mesh()):
             out = repro.matmul(a, b, policy="tcec_bf16x6")
-        assert shmap.CALLS["matmul"] == n0 + 1
+        assert shmap.counters()["matmul"] == n0 + 1
         np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
@@ -267,14 +267,14 @@ def test_sharded_train_step_runs_and_routes_fused_attention(tmp_path):
     # all devices on the model axis: works at any forced device count
     # (Hkv=2 falls back to q-sequence sharding when model > 2)
     mesh = make_host_mesh(model=len(jax.devices()))
-    n0 = shmap.CALLS["attention"]
+    n0 = shmap.counters()["attention"]
     with numerics.use(force=True, interpret=True):
         state, hist = train(cfg, adamw.OptConfig(lr=1e-3),
                             DataConfig(seed=0, global_batch=2, seq_len=128),
                             TrainLoopConfig(total_steps=1, ckpt_every=100),
                             str(tmp_path), mesh=mesh, log=lambda m: None)
     assert np.isfinite(hist[-1]["loss"])
-    assert shmap.CALLS["attention"] > n0     # fused route fired in the step
+    assert shmap.counters()["attention"] > n0     # fused route fired in the step
 
 
 def test_engine_under_mesh_matches_unsharded_greedy():
@@ -293,12 +293,12 @@ def test_engine_under_mesh_matches_unsharded_greedy():
     nc = numerics.active().replace(force=True, interpret=True)
     base = Engine(cfg, params, max_slots=2, numerics_config=nc).run(
         prompts, sp)
-    n0 = shmap.CALLS["paged"]
+    n0 = shmap.counters()["paged"]
     with ctx.use_mesh(_one_device_mesh()):
         eng = Engine(cfg, params, max_slots=2, numerics_config=nc)
     out = eng.run(prompts, sp)     # mesh captured at construction
     assert eng.mesh is not None
-    assert shmap.CALLS["paged"] > n0
+    assert shmap.counters()["paged"] > n0
     assert list(base.values()) == list(out.values())
 
 
@@ -372,11 +372,11 @@ SUBPROC_BATTERY = textwrap.dedent("""
                                softcap=20.0)
         plan = shmap.attention_plan(q.shape, k.shape, mesh8)
         assert plan.mode == "heads", plan
-        n0 = shmap.CALLS["attention"]
+        n0 = shmap.counters()["attention"]
         with ctx.use_mesh(mesh8):
             outa = repro.attention(q, k, v, policy="tcec_bf16x6", window=37,
                                    softcap=20.0)
-        assert shmap.CALLS["attention"] == n0 + 1
+        assert shmap.counters()["attention"] == n0 + 1
         assert np.array_equal(np.asarray(outa), np.asarray(refa))
 
         q1 = rand((2, 256, 2, 64), 9)          # Hkv=1: forces qseq on 4-way
@@ -410,11 +410,11 @@ SUBPROC_BATTERY = textwrap.dedent("""
         refp = kd.attention_decode(qd, kp, vp, bt, lens,
                                    policy="tcec_bf16x6", window=17)
         assert refp is not None
-        n0 = shmap.CALLS["paged"]
+        n0 = shmap.counters()["paged"]
         with ctx.use_mesh(mesh8):
             outp = kd.attention_decode(qd, kp, vp, bt, lens,
                                        policy="tcec_bf16x6", window=17)
-        assert outp is not None and shmap.CALLS["paged"] == n0 + 1
+        assert outp is not None and shmap.counters()["paged"] == n0 + 1
         assert np.array_equal(np.asarray(outp), np.asarray(refp))
 
         # ---- 4-way sharded train step exercises the fused route -------
@@ -424,7 +424,7 @@ SUBPROC_BATTERY = textwrap.dedent("""
         from repro.train.loop import TrainLoopConfig, train
         import tempfile
         cfg_m = get_smoke_config("qwen3-0.6b")
-        n0 = shmap.CALLS["attention"]
+        n0 = shmap.counters()["attention"]
         with numerics.use(min_dim=128, block=None, attn_block=(128, 128)):
             with tempfile.TemporaryDirectory() as d:
                 state, hist = train(
@@ -433,7 +433,7 @@ SUBPROC_BATTERY = textwrap.dedent("""
                     TrainLoopConfig(total_steps=1, ckpt_every=100),
                     d, mesh=mesh4, log=lambda m: None)
         assert np.isfinite(hist[-1]["loss"])
-        assert shmap.CALLS["attention"] > n0
+        assert shmap.counters()["attention"] > n0
         # params really sharded on the mesh
         shardings = {s for leaf in jax.tree.leaves(state["params"])
                      for s in [leaf.sharding]}
