@@ -164,6 +164,106 @@ def run(smoke: bool = False) -> bool:
                            ("queue_wait_p50_s", qwait, 50)):
         record(f"serving/latency/{label}", hist.percentile(p), unit="s",
                kind="measured", higher_is_better=False)
+
+    # ---- shared-prefix scenario: COW prefix cache on vs off -------------
+    # Deterministic trace, mixed lengths, ~70% shared system prompt (the
+    # docs/serving.md workload).  A primer request populates the prefix
+    # tree, then a burst of 8 requests lands at once: cache-off recomputes
+    # the 192 shared tokens per request in its batched monolithic
+    # prefills, cache-on prefills only each novel tail against read-only
+    # shared pages.  The cache-on run must be token-identical (f32
+    # pools), score a nonzero hit-rate, and beat the cache-off TTFT p50.
+    from repro import numerics
+    from repro.serving import Engine, SamplingParams
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab_size, 192)      # shared system prompt
+    tails = [rng.integers(0, cfg.vocab_size, int(n))
+             for n in rng.choice([64, 96], 8)]         # mixed novel tails
+    trace_prompts = [np.concatenate([system, t]) for t in tails]
+    shared_frac = len(system) * len(trace_prompts) / sum(
+        len(p) for p in trace_prompts)
+    pgen = 4
+
+    import time as _time
+
+    def _prefix_run(on):
+        # exact per-request TTFT (first burst token after the burst's
+        # enqueue) via a manual step loop — the obs histogram's fixed
+        # buckets are too coarse to resolve the prefill a hit skips.
+        # One engine per mode: each Engine owns fresh jit wrappers, so
+        # the first two bursts pay every compile and the third measures
+        # warm steady-state (repeat traffic — hits land at plen-1 and
+        # COW-split the recomputed last page).
+        nc = numerics.active().replace(prefix_cache=on)
+        eng = Engine(cfg, params, max_slots=len(trace_prompts),
+                     num_pages=353, page_size=8, max_pages_per_slot=40,
+                     numerics_config=nc, cache_dtype=jnp.float32)
+        eng.add_request(system, SamplingParams(max_tokens=2, seed=99))
+        eng.run()                         # primer: inserts the system pages
+
+        def burst():
+            rids = [eng.add_request(p, SamplingParams(max_tokens=pgen,
+                                                      seed=i))
+                    for i, p in enumerate(trace_prompts)]
+            t0 = _time.perf_counter()
+            first: dict[int, float] = {}
+            while eng.sched.has_work or eng._inflight is not None:
+                eng.step()
+                now = _time.perf_counter()
+                for rid in rids:
+                    req = eng._requests[rid]
+                    if rid not in first and (req.out or req.finished):
+                        first[rid] = now - t0
+            dt = _time.perf_counter() - t0
+            out = eng.results()
+            return out, sorted(first.values()), \
+                sum(len(out[r]) for r in rids) / dt
+
+        burst(), burst()                               # compile warmup
+        out, ttfts, tps = burst()
+        return (out, eng, float(np.percentile(ttfts, 50)),
+                float(np.percentile(ttfts, 99)), tps)
+
+    out_off, _, p50_off, p99_off, _ = _prefix_run(False)
+    out_on, eng_on, p50_on, p99_on, tps_on = _prefix_run(True)
+    prefix_parity = all(list(out_off[r]) == list(out_on[r])
+                        for r in sorted(out_off))
+    pstats = eng_on.stats()
+    n_reqs = 1 + 3 * len(trace_prompts)   # primer + three bursts
+    hit_rate = pstats["prefix_hits"] / n_reqs
+    prefix_ok = prefix_parity and pstats["prefix_hits"] > 0
+    ok &= prefix_ok
+    record("serving/prefix/parity", float(prefix_parity))
+    record("serving/prefix/hit_rate", hit_rate, unit="frac",
+           higher_is_better=True)
+    record("serving/prefix/tokens_reused",
+           float(pstats["prefix_tokens_reused"]), unit="tok",
+           higher_is_better=True)
+    record("serving/prefix/cow_splits", float(pstats["cow_splits"]),
+           unit="count", higher_is_better=False)
+    record("serving/prefix/tok_per_s", tps_on, unit="tok/s",
+           kind="measured", higher_is_better=True)
+    for label, val in (("ttft_p50_s", p50_on), ("ttft_p99_s", p99_on),
+                       ("ttft_p50_off_s", p50_off),
+                       ("ttft_p99_off_s", p99_off)):
+        record(f"serving/prefix/{label}", val, unit="s", kind="measured",
+               higher_is_better=False)
+    record("serving/prefix/ttft_p50_speedup",
+           p50_off / p50_on if p50_on else 1.0, unit="x", kind="measured",
+           higher_is_better=True)
+    emit("serving_prefix",
+         "Shared-prefix serving — COW prefix cache on a deterministic "
+         f"trace ({shared_frac:.0%} shared system prompt, mixed lengths)",
+         ["metric", "value"],
+         [["token parity (cache on == off, f32 pools)", str(prefix_parity)],
+          ["prefix hit-rate", f"{hit_rate:.2f}"],
+          ["prompt tokens reused", pstats["prefix_tokens_reused"]],
+          ["COW splits", pstats["cow_splits"]],
+          ["TTFT p50 on/off", f"{p50_on:.3f}s / {p50_off:.3f}s"],
+          ["TTFT p50 speedup", f"{p50_off / max(p50_on, 1e-9):.2f}x"]],
+         "hits map shared pages read-only and prefill only the novel "
+         "tail; the last prompt position always recomputes (COW)")
+
     if smoke:
         return ok
 

@@ -18,6 +18,8 @@ site                   effect at the instrumented callsite
 ``decode.nonfinite``   engine poisons one slot's decode logits to NaN
 ``decode.slow``        engine step burns extra deadline ticks
 ``prefill``            engine prefill raises (group is re-queued)
+``prefill.chunk``      one prefill chunk raises (request is re-queued)
+``prefix.lookup``      prefix-cache lookup reports a miss (full prefill)
 ``tuning.cache``       autotuner cache read returns a corrupt entry
 =====================  ====================================================
 
@@ -69,6 +71,10 @@ SITES: dict[str, str] = {
                         "(arg = slot index, -1 = every slot)",
     "decode.slow": "engine step burns extra deadline ticks (arg = ticks)",
     "prefill": "engine prefill raises FaultInjected (group re-queued)",
+    "prefill.chunk": "one prefill chunk raises FaultInjected (request "
+                     "re-queued under the prefill 3-strike cap)",
+    "prefix.lookup": "prefix-cache lookup reports a miss (degrades to a "
+                     "full prefill, token-identical)",
     "tuning.cache": "autotuner cache read returns a corrupt entry",
 }
 

@@ -119,6 +119,18 @@ def main():
     ap.add_argument("--deadline", type=int, default=0,
                     help="per-request deadline in engine steps; expired "
                          "requests finish with reason=timeout (0 = none)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages copy-on-write "
+                         "across requests (docs/serving.md)")
+    ap.add_argument("--chunked-prefill", type=int, default=0, metavar="C",
+                    help="prefill prompts in C-token chunks interleaved "
+                         "with decode steps (0 = single-shot)")
+    ap.add_argument("--async-sched", action="store_true",
+                    help="overlap host scheduling with the in-flight "
+                         "decode step (block only at consume)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="make the first N prompt tokens identical across "
+                         "the batch (exercises the prefix cache)")
     ap.add_argument("--mesh-model", type=int, default=0, metavar="N",
                     help="install a (devices/N, N) (data, model) host mesh: "
                          "the engine shards its page pools (KV heads on "
@@ -151,9 +163,12 @@ def _main(args):
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)
+    prompts_np = rng.integers(0, cfg.vocab_size,
+                              (args.batch, args.prompt_len))
+    if args.shared_prefix:
+        n = min(args.shared_prefix, args.prompt_len)
+        prompts_np[:, :n] = prompts_np[0, :n]
+    prompts = jnp.asarray(prompts_np, jnp.int32)
 
     if model.decode_step_paged is None:
         t0 = time.time()
@@ -170,10 +185,17 @@ def _main(args):
     ps = DEFAULT_PAGE_SIZE
     pages = -(-(args.prompt_len + args.gen + 1) // ps)
     slots = args.max_slots or args.batch
+    nc = numerics.active()
+    if args.prefix_cache or args.chunked_prefill or args.async_sched:
+        nc = nc.replace(
+            prefix_cache=bool(args.prefix_cache) or nc.prefix_cache,
+            chunked_prefill=args.chunked_prefill or nc.chunked_prefill,
+            async_sched=bool(args.async_sched) or nc.async_sched)
     engine = Engine(cfg, params, max_slots=slots,
                     num_pages=1 + max(slots, args.batch) * pages,
                     page_size=ps, max_pages_per_slot=pages,
-                    max_waiting=args.max_waiting or None)
+                    max_waiting=args.max_waiting or None,
+                    numerics_config=nc)
     t0 = time.time()
     rids = []
     for i in range(args.batch):
@@ -204,6 +226,10 @@ def _main(args):
                   ("guard_trips", "fallback_reruns", "rejections",
                    "overloads", "timeouts", "preemptions", "parks")}
     print(f"resilience: {resilience}")
+    prefix = {k: stats[k] for k in
+              ("prefix_hits", "prefix_tokens_reused", "cow_splits",
+               "prefix_evictions", "prefill_chunks")}
+    print(f"prefix: {prefix}")
     if rids:
         print("sample:", out[rids[0]][:16])
 

@@ -60,6 +60,9 @@ def get_model(cfg, numerics_config: numerics.NumericsConfig | None = None
             params, cfg, cache, tokens, idx),
         prefill=(lambda params, tokens, positions=None: mod.prefill(
             params, cfg, tokens, positions)) if paged else None,
+        prefill_chunk=(lambda params, cache, tokens, start:
+                       mod.prefill_chunk(params, cfg, cache, tokens,
+                                         start)) if paged else None,
         init_paged_cache=(lambda num_pages, page_size, **kw:
                           mod.init_paged_cache(cfg, num_pages, page_size,
                                                **kw)) if paged else None,
@@ -71,8 +74,8 @@ def get_model(cfg, numerics_config: numerics.NumericsConfig | None = None
     )
     if numerics_config is not None:
         for name in ("init", "loss_fn", "forward_logits", "init_cache",
-                     "decode_step", "prefill", "init_paged_cache",
-                     "decode_step_paged"):
+                     "decode_step", "prefill", "prefill_chunk",
+                     "init_paged_cache", "decode_step_paged"):
             setattr(handle, name, _pinned(getattr(handle, name),
                                           numerics_config))
     return handle

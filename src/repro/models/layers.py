@@ -334,6 +334,35 @@ def attention_prefill(p, x, cfg, positions, window=0):
     return out, {"k": k, "v": v}
 
 
+def attention_chunk(p, x, cfg, cache, start, window=0):
+    """One prefill *chunk* against a dense scratch cache (chunked prefill).
+
+    x: (B, C, d_model) — chunk tokens at absolute positions ``start ..
+    start + C``; cache: an :func:`attention_prefill`-layout dense cache
+    ``{"k", "v"}`` with leaves (B, T, Hkv, d) holding every earlier
+    chunk's exact K/V (and, on a prefix-cache hit, the gathered shared
+    pages).  The chunk's own K/V is written in, then attention runs over
+    the full [0, T) key range through the same :func:`sdpa` router as the
+    monolithic prefill — the causal mask hides positions ``>= start + C``
+    (zero-initialized scratch stays finite, so the additive mask bias is
+    safe), which makes each chunk row bitwise-equal to the corresponding
+    monolithic prefill row when the cache is f32.
+    """
+    B, C = x.shape[:2]
+    positions = jnp.broadcast_to(
+        start + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, start, 0, 0))
+    T = ck.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    o = sdpa(q, ck, cv, cfg, positions, k_pos, True, window)
+    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    return out, {"k": ck, "v": cv}
+
+
 def attention_decode_paged(p, x, cfg, pool, block_tables, lengths, window=0):
     """One-token decode against a paged KV cache (serving engine).
 

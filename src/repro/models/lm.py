@@ -186,6 +186,39 @@ def stack_decode_paged(stacked, x, cfg, pools, block_tables, lengths,
     return x, new_pools
 
 
+def block_chunk(p, x, cfg, cache, start, window, *, moe: bool):
+    """``block_prefill`` for one chunk of the prompt, reading/extending a
+    dense scratch cache (chunked prefill — serving engine)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        a, new_cache = M.mla_attention_chunk(p["attn"], h, cfg, cache, start)
+    else:
+        a, new_cache = L.attention_chunk(p["attn"], h, cfg, cache, start,
+                                         window=window)
+    if cfg.sandwich_norms:
+        a = L.rmsnorm(p["post_ln1"], a, cfg.norm_eps)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, _ = L.moe(p["moe"], h, cfg)
+    else:
+        m = L.mlp(p["mlp"], h, cfg)
+    if cfg.sandwich_norms:
+        m = L.rmsnorm(p["post_ln2"], m, cfg.norm_eps)
+    return x + m, new_cache
+
+
+def stack_chunk(stacked, x, cfg, caches, start, windows, *, moe: bool):
+    def body(carry, xs):
+        lp, cache, w = xs
+        y, nc = block_chunk(lp, carry, cfg, cache, start, w, moe=moe)
+        return y, nc
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches,
+                                           jnp.asarray(windows)))
+    return x, new_caches
+
+
 # ----------------------------------------------------------- top level
 
 def init(cfg, key):
@@ -351,6 +384,38 @@ def prefill(params, cfg, tokens, positions=None):
         kv["moe_blocks"] = kvs
     x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     return unembed_logits(params, x, cfg), kv
+
+
+def prefill_chunk(params, cfg, cache, tokens, start):
+    """One chunk of a chunked prefill: advance every layer's dense scratch
+    cache by ``tokens`` (B, C) at absolute positions ``start .. start+C``
+    and return the chunk's logits.
+
+    ``cache`` is an :func:`init_cache` tree (leaves (nL, B, T, ...), f32
+    for exact parity) holding every earlier chunk's K/V — and, on a
+    prefix-cache hit, the gathered shared pages.  Returns ``(logits
+    (B, C, V), new_cache)``.  Running all chunks then matches the
+    monolithic :func:`prefill` row-for-row (the serving engine's
+    chunked-prefill parity contract)."""
+    B, C = tokens.shape
+    x = embed(params, tokens, cfg)
+    windows = layer_windows(cfg, cfg.n_layers)
+    nd = cfg.first_dense_layers
+    n_moe = (cfg.n_layers - nd) if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    new_cache = {}
+    if n_dense:
+        x, nc = stack_chunk(params["dense_blocks"], x, cfg,
+                            cache["dense_blocks"], start,
+                            windows[:n_dense], moe=False)
+        new_cache["dense_blocks"] = nc
+    if n_moe:
+        x, nc = stack_chunk(params["moe_blocks"], x, cfg,
+                            cache["moe_blocks"], start,
+                            windows[n_dense:], moe=True)
+        new_cache["moe_blocks"] = nc
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return unembed_logits(params, x, cfg), new_cache
 
 
 def init_paged_cache(cfg, num_pages: int, page_size: int,

@@ -77,6 +77,41 @@ def mla_attention_prefill(p, x, cfg, positions):
     return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 
+def mla_attention_chunk(p, x, cfg, cache, start):
+    """One prefill chunk against a dense latent scratch cache.
+
+    x: (B, C, D) at absolute positions ``start .. start + C``; cache:
+    :func:`mla_init_cache` leaves (B, T, kvr)/(B, T, dr) holding earlier
+    chunks' exact compressed entries.  Takes the *decompressed* attend —
+    the same math as :func:`mla_attention_prefill`, NOT the absorbed
+    decode path — so chunk rows match the monolithic prefill bitwise when
+    the scratch is f32 (decompression is per-position, so cached prefix
+    rows decompress to exactly the monolithic values).
+    """
+    B, C = x.shape[:2]
+    H, dr = cfg.n_heads, cfg.qk_rope_dim
+    positions = jnp.broadcast_to(
+        start + jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    c_kv_t, k_rope_t = _kv_compress(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), (0, start, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype),
+        (0, start, 0))
+    T = ck.shape[1]
+    k_nope = pdot("bsr,rhk->bshk", ck, p["w_uk"], cfg.policy)
+    v = pdot("bsr,rhk->bshk", ck, p["w_uv"], cfg.policy)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, T, H, dr))],
+        axis=-1)
+    k_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    o = sdpa(q, k, v, cfg, positions, k_pos, causal=True)
+    out = pdot("bshk,hkd->bsd", o, p["wo"], cfg.policy)
+    return out, {"c_kv": ck, "k_rope": kr}
+
+
 def mla_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {
         "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),

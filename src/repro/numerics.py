@@ -155,6 +155,21 @@ ENV_VARS: dict[str, EnvVar] = {v.name: v for v in [
            "XLA term-expansion path and quarantines that (backend, kernel, "
            "shape-bucket) key for a cooldown (kernels/guard.py).  0 lets "
            "kernel errors propagate (debugging).", field="guard"),
+    EnvVar("REPRO_PREFIX_CACHE", "bool", False,
+           "Serving engine: share full prompt pages across requests via "
+           "the copy-on-write prefix cache (serving/prefix_cache.py) — "
+           "a cached prefix skips its recompute and only the novel tail "
+           "prefills.", field="prefix_cache"),
+    EnvVar("REPRO_CHUNKED_PREFILL", "int", 0,
+           "Serving engine: prefill prompts in chunks of this many tokens "
+           "(rounded up to the page size), interleaved with decode steps "
+           "so long prompts stop head-of-line-blocking admissions.  0 = "
+           "monolithic single-shot prefill.", field="chunked_prefill"),
+    EnvVar("REPRO_ASYNC_SCHED", "bool", False,
+           "Serving engine: overlap host scheduling with the in-flight "
+           "jitted decode step (dispatch one step ahead; block only at "
+           "the consume point).  Token-identical to the synchronous "
+           "default.", field="async_sched"),
     EnvVar("REPRO_MONITOR", "bool", False,
            "Numerics-health monitors: sampled per-contraction probes of "
            "the paper's underflow-risk indicators (correction-term "
@@ -241,6 +256,10 @@ class NumericsConfig:
     paged_block: int | None = None  # pages-per-step override
     shard_map: bool = True          # mesh dispatch via kernels/shmap.py
     guard: bool = True              # circuit-breaker guarded dispatch
+    # -- serving ------------------------------------------------------
+    prefix_cache: bool = False      # COW prefix sharing (serving engine)
+    chunked_prefill: int = 0        # prefill chunk tokens (0 = monolithic)
+    async_sched: bool = False       # overlap host sched with device step
     # -- observability ------------------------------------------------
     monitor: bool = False           # numerics-health probes (repro.obs)
     # -- autotuning ---------------------------------------------------
@@ -292,6 +311,9 @@ class NumericsConfig:
                                           environ),
             shard_map=env_value("REPRO_SHARD_MAP", environ),
             guard=env_value("REPRO_GUARD", environ),
+            prefix_cache=env_value("REPRO_PREFIX_CACHE", environ),
+            chunked_prefill=env_value("REPRO_CHUNKED_PREFILL", environ),
+            async_sched=env_value("REPRO_ASYNC_SCHED", environ),
             monitor=env_value("REPRO_MONITOR", environ),
             tune=tune,
             tune_cache=env_value("REPRO_TUNE_CACHE", environ),
@@ -553,7 +575,7 @@ def parse_override_args(pairs) -> dict:
             out[key] = tuple(int(v) for v in raw.split(","))
         elif key in ("policy", "tune", "tune_cache"):
             out[key] = raw
-        elif key in ("min_dim", "paged_block"):
+        elif key in ("min_dim", "paged_block", "chunked_prefill"):
             out[key] = int(raw)
         elif raw.lower() in _TRUE:             # the bool fields
             out[key] = True

@@ -6,10 +6,11 @@ from .errors import (EngineOverloaded, FinishReason, PagePoolError,
                      RequestRejected, RequestResult, SchedulerInvariantError,
                      ServingError)
 from .kv_cache import DEFAULT_PAGE_SIZE, PagePool
+from .prefix_cache import PrefixCache
 from .sampling import SamplingParams
 from .scheduler import Request, RequestState, Scheduler
 
-__all__ = ["Engine", "PagePool", "SamplingParams", "Request",
+__all__ = ["Engine", "PagePool", "PrefixCache", "SamplingParams", "Request",
            "RequestState", "Scheduler", "DEFAULT_PAGE_SIZE",
            "FinishReason", "RequestResult", "ServingError",
            "RequestRejected", "EngineOverloaded", "SchedulerInvariantError",

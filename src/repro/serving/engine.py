@@ -58,7 +58,9 @@ from . import sampling
 from .errors import (EngineOverloaded, FinishReason, RequestRejected,
                      RequestResult)
 from .kv_cache import (DEFAULT_PAGE_SIZE, PagePool, inverse_permutation,
-                       permute_pages, write_prompt_pages)
+                       load_pages_into_scratch, permute_pages,
+                       write_prompt_pages, write_span_pages)
+from .prefix_cache import PrefixCache
 from .sampling import SamplingParams
 from .scheduler import Request, RequestState, Scheduler
 
@@ -73,6 +75,7 @@ def _engines_source() -> dict:
     for eng in list(_LIVE_ENGINES):
         stats = {**eng._stats, "clock": eng.clock,
                  "prefills": eng.n_prefills,
+                 "prefill_chunks": eng.n_prefill_chunks,
                  "decode_steps": eng.n_decode_steps,
                  "preemptions": eng.sched.n_preemptions,
                  "parks": eng.sched.n_parks}
@@ -113,6 +116,16 @@ class Engine:
         :class:`EngineOverloaded` (None = unbounded).
     max_preemptions: evictions before a request is parked as a
         preemption-storm victim (None = never park).
+    cache_dtype: page-pool element dtype (None = the family default,
+        bfloat16).  The shared-prefix parity contract needs float32: a
+        reused page's K/V must be bitwise what a fresh prefill would
+        compute, and the bf16 round-trip loses that.
+
+    Three serving knobs ride on the pinned
+    :class:`~repro.numerics.NumericsConfig` (``REPRO_PREFIX_CACHE``,
+    ``REPRO_CHUNKED_PREFILL``, ``REPRO_ASYNC_SCHED``); all default off,
+    and with all three off every code path below is byte-identical to
+    the legacy single-shot engine.
     """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
@@ -122,6 +135,7 @@ class Engine:
                  max_waiting: int | None = None,
                  max_preemptions: int | None = 8,
                  numerics_config: numerics.NumericsConfig | None = None,
+                 cache_dtype=None,
                  mesh=None):
         # the engine's kernel-dispatch recipe is pinned at construction:
         # every jitted step runs under this scope, so an ambient
@@ -161,8 +175,11 @@ class Engine:
         self._fallback_numerics = self.numerics_config.replace(enabled=False)
         self._stats = {"guard_trips": 0, "fallback_reruns": 0,
                        "numerics_errors": 0, "rejections": 0, "overloads": 0,
-                       "timeouts": 0, "length_caps": 0, "prefill_faults": 0}
-        self.pools = model.init_paged_cache(num_pages, page_size)
+                       "timeouts": 0, "length_caps": 0, "prefill_faults": 0,
+                       "prefix_hits": 0, "prefix_tokens_reused": 0,
+                       "cow_splits": 0, "prefix_evictions": 0}
+        kw = {} if cache_dtype is None else {"dtype": cache_dtype}
+        self.pools = model.init_paged_cache(num_pages, page_size, **kw)
         if self.mesh is not None:
             self.pools = jax.device_put(self.pools, self._pool_shardings())
         # host mirrors of the per-slot device state
@@ -183,8 +200,33 @@ class Engine:
                                                  model=model, cfg=cfg),
                                donate_argnums=donate)
         self._prefill = jax.jit(lambda p, toks: model.prefill(p, toks))
+        self._prefill_chunk = jax.jit(
+            lambda p, cache, toks, start: model.prefill_chunk(
+                p, cache, toks, start))
+        # serving knobs ride on the pinned numerics config; chunk size is
+        # rounded UP to a page multiple so every chunk boundary is also a
+        # page boundary (the span scatter stays whole-page)
+        self.chunk_tokens = 0
+        if self.numerics_config.chunked_prefill > 0:
+            self.chunk_tokens = (-(-self.numerics_config.chunked_prefill
+                                   // page_size)) * page_size
+        self.async_sched = bool(self.numerics_config.async_sched)
+        self.prefix = (PrefixCache(self.pool)
+                       if self.numerics_config.prefix_cache else None)
+        if self.prefix is not None:
+            self.sched.evict_cb = self._evict_prefix
+        # async overlap: the dispatched-but-unconsumed decode step, plus
+        # double-buffered host staging for its integer/float inputs (the
+        # mirrors may be mutated for step N+1 while step N is in flight)
+        self._inflight = None
+        self._staging = [
+            {name: np.zeros_like(getattr(self, name))
+             for name in ("block_tables", "lengths", "next_tok",
+                          "temps", "topks", "topps")}
+            for _ in range(2)]
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_prefill_chunks = 0
         _LIVE_ENGINES.add(self)
 
     def _pool_shardings(self):
@@ -302,7 +344,15 @@ class Engine:
             req.finish_reason = FinishReason.LENGTH_CAP.value
             self.sched.drop(req)
             self._trace_request_end(req)
-        admitted = self.sched.admit()
+        plan = (self._plan_admission
+                if (self.prefix is not None or self.chunk_tokens) else None)
+        admitted = self.sched.admit(plan)
+        for req in admitted:
+            if req.state is RequestState.PREFILLING:
+                if req.shared_pages:
+                    self._stats["prefix_hits"] += 1
+                    self._stats["prefix_tokens_reused"] += req.prefill_done
+                self._start_chunked_prefill(req)
         tr = _current_tracer()
         if tr is not None:
             now = tr.now()
@@ -312,9 +362,12 @@ class Engine:
                     self._observe_latency("queue_wait_s",
                                           now - req.t_enqueue)
         ps = self.pool.page_size
-        # same padded length -> one batched prefill call
+        # same padded length -> one batched prefill call (PREFILLING
+        # admissions advance chunk-by-chunk in _prefill_chunk_step instead)
         groups: dict[int, list[Request]] = {}
         for req in admitted:
+            if req.state is not RequestState.RUNNING:
+                continue
             seq = req.full_sequence
             padded = max(1, -(-len(seq) // ps)) * ps
             groups.setdefault(padded, []).append(req)
@@ -335,6 +388,12 @@ class Engine:
                                     for req in reqs], np.int32)
                 self.pools = write_prompt_pages(self.pools, kv,
                                                 jnp.asarray(pages))
+                if self.prefix is not None:
+                    # register full pages before the accept loop: a request
+                    # finishing on its first token frees its own refs, but
+                    # the tree's references keep the pages alive
+                    for req in reqs:
+                        self.prefix.insert(req.full_sequence, req.pages)
                 for i, req in enumerate(reqs):
                     plen = len(req.full_sequence)
                     self.lengths[req.slot] = plen
@@ -370,6 +429,158 @@ class Engine:
                 self._finish(req, FinishReason.ERROR)
             else:
                 self.sched.unadmit(req)
+
+    # ------------------------------------- shared prefixes / chunked prefill
+
+    def _evict_prefix(self, n: int) -> int:
+        """Scheduler eviction hook: reclaim ``n`` pages from the prefix
+        cache's LRU tail when the pool runs dry."""
+        freed = self.prefix.evict_for(n)
+        self._stats["prefix_evictions"] += freed
+        return freed
+
+    def _plan_admission(self, req: Request):
+        """Admission plan for :meth:`Scheduler.admit` when the prefix
+        cache and/or chunked prefill is on.
+
+        Returns None for the legacy single-shot route, else ``(shared,
+        start, reserve)``: the cached pages to map at the head of the
+        block table, the token offset prefill resumes from, and how many
+        pages to allocate for the first chunk's span.  The last prompt
+        position is always recomputed (its logits seed the first sampled
+        token), so a full-prompt hit still rewrites the final page — the
+        deterministic copy-on-write trigger.
+        """
+        ps = self.pool.page_size
+        seq = req.full_sequence
+        plen = len(seq)
+        padded = max(1, -(-plen // ps)) * ps
+        shared, start = [], 0
+        if self.prefix is not None:
+            pages, matched = self.prefix.match(seq)
+            hit = min(matched, plen - 1)
+            # resume on the chunk grid; the overlap [start, matched) is
+            # recomputed bitwise-identically and COW-splits its pages
+            grid = self.chunk_tokens or ps
+            start = (hit // grid) * grid
+            shared = pages if start > 0 else []
+            if not shared:
+                start = 0
+        if not shared and not (self.chunk_tokens
+                               and plen > self.chunk_tokens):
+            return None
+        end = (min(start + self.chunk_tokens, padded)
+               if self.chunk_tokens else padded)
+        reserve = max(0, -(-end // ps) - len(shared))
+        return shared, start, reserve
+
+    def _start_chunked_prefill(self, req: Request):
+        """Set up a PREFILLING admission: a per-request float32 dense
+        scratch cache sized to the chunk grid, pre-populated with the
+        shared prefix's K/V.  Chunk attention reads earlier chunks' exact
+        f32 values from here, so the math matches a monolithic prefill
+        bitwise; only finished whole pages are scattered to the pool."""
+        ps = self.pool.page_size
+        plen = len(req.full_sequence)
+        padded = max(1, -(-plen // ps)) * ps
+        T = padded
+        if self.chunk_tokens:
+            T = (-(-padded // self.chunk_tokens)) * self.chunk_tokens
+        req.scratch = self.model.init_cache(1, T, dtype=jnp.float32)
+        n_load = req.prefill_done // ps
+        if n_load:
+            req.scratch = load_pages_into_scratch(
+                req.scratch, self.pools,
+                jnp.asarray(req.pages[:n_load], jnp.int32))
+
+    def _preempt_prefilling(self, req: Request):
+        """A dry pool mid-chunk: recompute-preempt the request itself (a
+        re-admission replans, re-matching the prefix cache cleanly) —
+        unless the pool could never hold it, which finishes it instead of
+        livelocking."""
+        slot = req.slot
+        if len(req.pages) + 1 >= self.pool.num_pages:
+            self._finish(req, FinishReason.ERROR)
+            return
+        self.sched.preempt(req)
+        self._clear_slot(slot)
+        self._trace_preempt(req)
+
+    def _prefill_chunk_step(self):
+        """Advance every PREFILLING request by one chunk (admission
+        order), interleaved with the batched decode step — a long prompt
+        no longer stalls every resident decode for its whole prefill, and
+        two prefix hits admitted together both emit their first token in
+        the admission step, like the monolithic batched path."""
+        cands = sorted((r for r in self.sched.running.values()
+                        if r.state is RequestState.PREFILLING),
+                       key=lambda r: self.sched._admitted_at[r.rid])
+        for req in cands:
+            if not self._advance_chunk(req):
+                return
+
+    def _advance_chunk(self, req: Request) -> bool:
+        """One chunk of one request; False stops this step's chunk phase
+        (pool pressure or an injected fault — retry next step)."""
+        ps = self.pool.page_size
+        seq = req.full_sequence
+        plen = len(seq)
+        padded = max(1, -(-plen // ps)) * ps
+        start = req.prefill_done
+        C = self.chunk_tokens or (padded - start)
+        with self._span("prefill.chunk", rid=req.rid, start=start, chunk=C):
+            # pages this chunk scatters back: whole pages in
+            # [start, min(start+C, padded)) — the grid-rounded final
+            # chunk's pure-padding tail is never materialized
+            span_lo = start // ps
+            span_hi = -(-min(start + C, padded) // ps)
+            need = span_hi - len(req.pages)
+            if need > 0 and self.sched.reserve(req, need) is None:
+                self._preempt_prefilling(req)
+                return False
+            # copy-on-write: never write a page someone else references
+            for idx in range(span_lo, span_hi):
+                if self.pool.refcount(req.pages[idx]) > 1:
+                    got = self.sched._alloc(1)
+                    if got is None:
+                        self._preempt_prefilling(req)
+                        return False
+                    old = req.pages[idx]
+                    req.pages[idx] = got[0]
+                    self.pool.free([old])
+                    self._stats["cow_splits"] += 1
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :min(plen, start + C) - start] = seq[start:start + C]
+            try:
+                faults.raise_if("prefill.chunk")
+                logits, req.scratch = self._prefill_chunk(
+                    self.params, req.scratch, jnp.asarray(toks),
+                    jnp.int32(start))
+            except Exception as exc:  # noqa: BLE001 — rolled back below
+                self._on_prefill_failure([req], exc)
+                return False
+            self.n_prefill_chunks += 1
+            self.pools = write_span_pages(
+                self.pools, req.scratch, jnp.int32(start),
+                jnp.asarray(req.pages[span_lo:span_hi], jnp.int32))
+            req.prefill_done = start + C
+            if req.prefill_done < padded:
+                return True
+            # prompt fully prefilled: this chunk contains position
+            # plen-1, whose logits seed the first sampled token (same
+            # draw convention as the monolithic path)
+            req.scratch = None
+            req.state = RequestState.RUNNING
+            if self.prefix is not None:
+                self.prefix.insert(seq, req.pages)
+            self.lengths[req.slot] = plen
+            self._sync_slot(req)
+            row = jnp.asarray(logits[0, plen - 1 - start,
+                                     :self.cfg.vocab_size], jnp.float32)
+            req.key, sub = jax.random.split(req.key)
+            tok = int(sampling.sample_one(row, req.params, sub))
+            self._accept_token(req, tok)
+        return True
 
     def _sync_slot(self, req: Request):
         """Push a request's page list and sampling knobs into its slot."""
@@ -427,6 +638,8 @@ class Engine:
                           key=lambda r: self.sched._admitted_at[r.rid]):
             if req.slot is None:        # preempted by an earlier grow
                 continue
+            if req.state is not RequestState.RUNNING:
+                continue                # PREFILLING: pages come per chunk
             page_idx = int(self.lengths[req.slot]) // ps
             if page_idx >= self.max_pages_per_slot:
                 self._stats["length_caps"] += 1
@@ -476,29 +689,55 @@ class Engine:
                 poison[spec.arg % self.max_slots] = True
         return poison
 
-    def _decode_step(self):
-        running = [r for r in self.sched.running.values()]
+    def _decode_dispatch(self):
+        """Launch the jitted decode step for every RUNNING slot and return
+        the in-flight record (None when nothing is running).  The host
+        inputs are snapshotted into an alternating staging buffer, so the
+        mirrors are free to mutate for the NEXT step while this one is on
+        device; nothing here blocks on the result."""
+        running = [r for r in self.sched.running.values()
+                   if r.state is RequestState.RUNNING]
         if not running:
-            return
+            return None
         with self._span("decode", batch=len(running)):
-            args = (self.params, jnp.asarray(self.block_tables),
-                    jnp.asarray(self.lengths), jnp.asarray(self.next_tok),
-                    jnp.asarray(self.temps), jnp.asarray(self.topks),
-                    jnp.asarray(self.topps))
+            buf = self._staging[self.n_decode_steps % 2]
+            for name, host in buf.items():
+                np.copyto(host, getattr(self, name))
+            args = (self.params, jnp.asarray(buf["block_tables"]),
+                    jnp.asarray(buf["lengths"]), jnp.asarray(buf["next_tok"]),
+                    jnp.asarray(buf["temps"]), jnp.asarray(buf["topks"]),
+                    jnp.asarray(buf["topps"]))
             prev_keys = self.keys    # NOT donated: reusable for the re-run
             toks, finite, pools, keys = self._decode(
                 args[0], self.pools, *args[1:], prev_keys,
                 jnp.asarray(self._poison_mask()))
             self.n_decode_steps += 1
+            self.pools, self.keys = pools, keys
+            return {"running": running, "args": args, "prev_keys": prev_keys,
+                    "toks": toks, "finite": finite}
+
+    def _decode_consume(self, inflight):
+        """Block on a dispatched step's results and apply them — the only
+        device sync in the loop.  Sync mode runs this right after the
+        dispatch; async mode runs it at the top of the NEXT step, so the
+        host's scheduling work for step N overlaps the device executing
+        step N-1.  Either way the consume happens before any other
+        mutation of that step, so the engine-state update order (and thus
+        every sampled token) is identical across modes."""
+        running, args = inflight["running"], inflight["args"]
+        prev_keys = inflight["prev_keys"]
+        toks, finite = inflight["toks"], inflight["finite"]
+        with self._span("decode.consume", batch=len(running)):
             finite = np.asarray(finite)
             bad = [r for r in running if not finite[r.slot]]
             if bad and self.numerics_config.guard:
                 # one-shot re-run of the whole step under the XLA-fallback
                 # numerics scope.  Safe to replay against the post-step
-                # pools: the step only writes the current position's K/V,
-                # which the re-run overwrites before reading.  prev_keys
-                # keeps every fault-free slot's sampling stream from
-                # advancing twice.
+                # pools (self.pools — nothing else has touched them since
+                # the dispatch): the step only writes the current
+                # position's K/V, which the re-run overwrites before
+                # reading.  prev_keys keeps every fault-free slot's
+                # sampling stream from advancing twice.
                 self._stats["guard_trips"] += 1
                 self._stats["fallback_reruns"] += 1
                 tr = _current_tracer()
@@ -507,10 +746,10 @@ class Engine:
                                slots=[r.slot for r in bad])
                 with numerics.use(self._fallback_numerics):
                     toks, finite, pools, keys = self._decode(
-                        args[0], pools, *args[1:], prev_keys,
+                        args[0], self.pools, *args[1:], prev_keys,
                         jnp.asarray(self._poison_mask()))
                 finite = np.asarray(finite)
-            self.pools, self.keys = pools, keys
+                self.pools, self.keys = pools, keys
             toks = np.asarray(toks)
             for req in running:
                 if not finite[req.slot]:
@@ -542,19 +781,30 @@ class Engine:
             self._trace_request_end(req)
 
     def step(self):
-        """One engine iteration: tick the deadline clock, expire
-        deadlines, admit + prefill, then one decode step for whatever is
-        in flight — under the construction-time numerics and mesh
-        scopes."""
+        """One engine iteration: consume any in-flight async decode,
+        tick the deadline clock, expire deadlines, admit + prefill,
+        advance one prefill chunk, then dispatch one decode step for
+        whatever is in flight — under the construction-time numerics and
+        mesh scopes.  Sync mode (default) consumes the dispatch inline;
+        async mode leaves it in flight until the next step."""
         with self._scopes(), self._span("engine.step") as sp:
+            if self._inflight is not None:
+                inflight, self._inflight = self._inflight, None
+                self._decode_consume(inflight)
             self.clock += 1
             spec = faults.poke("decode.slow")
             if spec is not None:         # injected slowdown: burn ticks
                 self.clock += max(1, spec.arg)
             self._expire_deadlines()
             self._admit_and_prefill()
+            self._prefill_chunk_step()
             self._ensure_pages()
-            self._decode_step()
+            inflight = self._decode_dispatch()
+            if inflight is not None:
+                if self.async_sched:
+                    self._inflight = inflight
+                else:
+                    self._decode_consume(inflight)
             # annotated at exit: the span args dict is live until then
             sp["clock"] = self.clock
             sp["occupancy"] = len(self.sched.running)
@@ -572,7 +822,7 @@ class Engine:
                 params = [params] * len(prompts)
             for prompt, sp in zip(prompts, params):
                 self.add_request(prompt, sp)
-        while self.sched.has_work:
+        while self.sched.has_work or self._inflight is not None:
             self.step()
         return self.results()
 
@@ -593,6 +843,7 @@ class Engine:
         return {**self._stats,
                 "clock": self.clock,
                 "prefills": self.n_prefills,
+                "prefill_chunks": self.n_prefill_chunks,
                 "decode_steps": self.n_decode_steps,
                 "preemptions": self.sched.n_preemptions,
                 "parks": self.sched.n_parks,
@@ -603,14 +854,23 @@ class Engine:
     def defragment(self):
         """Compact live pages to the low end of the pool: permutes the
         device page arrays and re-indexes every running request's block
-        table.  Safe between steps; output-invariant (tests assert)."""
+        table, prefix-cache node, and in-flight chunked prefill.  Safe
+        between steps; output-invariant (tests assert)."""
+        if self._inflight is not None:       # async: land the step first
+            inflight, self._inflight = self._inflight, None
+            with self._scopes():
+                self._decode_consume(inflight)
         mapping = self.pool.defrag()
         perm = inverse_permutation(mapping, self.pool.num_pages)
         self.pools = permute_pages(self.pools, perm)
+        if self.prefix is not None:
+            self.prefix.remap(mapping)
         for req in self.sched.running.values():
             req.pages = [mapping[p] for p in req.pages]
-            self.block_tables[req.slot] = 0
-            self.block_tables[req.slot, :len(req.pages)] = req.pages
+            if req.state is RequestState.RUNNING:
+                # PREFILLING slots keep zeroed (masked) block tables
+                self.block_tables[req.slot] = 0
+                self.block_tables[req.slot, :len(req.pages)] = req.pages
 
 
 def _decode_and_sample(params, pools, block_tables, lengths, toks, temps,

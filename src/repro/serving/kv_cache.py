@@ -43,6 +43,13 @@ class PagePool:
     LIFO free list: recently freed pages are reused first, which keeps the
     hot working set small.  ``alloc`` is all-or-nothing — a partial grant
     would deadlock two growing requests against each other.
+
+    Pages are **refcounted** so the prefix cache can share them across
+    requests (and hold its own reference): ``alloc`` hands out pages at
+    refcount 1, :meth:`share` adds owners, and :meth:`free` only returns a
+    page to the free list when its last owner lets go.  Uniquely-owned
+    pages behave exactly as before — the refcounts are invisible to
+    callers that never share.
     """
 
     def __init__(self, num_pages: int, page_size: int = DEFAULT_PAGE_SIZE):
@@ -57,6 +64,7 @@ class PagePool:
         self.page_size = page_size
         # page 0 is the scrap page — never handed out
         self._free = list(range(num_pages - 1, 0, -1))
+        self._ref: dict[int, int] = {}          # live page -> owner count
 
     @property
     def num_free(self) -> int:
@@ -85,16 +93,38 @@ class PagePool:
             return None
         taken = self._free[-n:][::-1]
         del self._free[-n:]
+        for p in taken:
+            self._ref[p] = 1
         return taken
 
+    def share(self, pages: list[int]) -> None:
+        """Add one owner to each page (prefix-cache sharing).  Only live
+        pages can gain owners — sharing a free page is a bookkeeping bug
+        of the same severity as a double free."""
+        for p in pages:
+            if self._ref.get(p, 0) < 1:
+                raise PagePoolError(f"share of non-live page {p}")
+        for p in pages:
+            self._ref[p] += 1
+
+    def refcount(self, p: int) -> int:
+        """Current owner count of page ``p`` (0 = free)."""
+        return self._ref.get(p, 0)
+
     def free(self, pages: list[int]) -> None:
+        """Drop one owner per page; pages reaching zero owners return to
+        the free list.  Freeing a page that has no owners is still a
+        double free."""
         for p in pages:
             if not 0 < p < self.num_pages:
                 raise PagePoolError(f"free of out-of-range page {p} "
                                     f"(pool has {self.num_pages})")
-            if p in self._free:
+            if self._ref.get(p, 0) < 1:
                 raise PagePoolError(f"double free of page {p}")
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
 
     def defrag(self) -> dict[int, int]:
         """Compact live pages onto the lowest indices.
@@ -108,6 +138,9 @@ class PagePool:
         live = sorted(set(range(1, self.num_pages)) - set(self._free))
         mapping = {old: new for new, old in enumerate(live, start=1)}
         self._free = list(range(self.num_pages - 1, len(live), -1))
+        # refcounts travel with their pages: a shared page moves ONCE and
+        # every owner's mapping update finds the same count at the new slot
+        self._ref = {mapping[p]: c for p, c in self._ref.items()}
         return mapping
 
 
@@ -132,6 +165,47 @@ def write_prompt_pages(pools, kv, pages):
         return pool.at[:, flat].set(kp.astype(pool.dtype))
 
     return jax.tree.map(one, pools, kv)
+
+
+@jax.jit
+def load_pages_into_scratch(scratch, pools, pages):
+    """Gather cached prefix pages into the head of a per-request dense
+    scratch cache (chunked prefill over a prefix-cache hit).
+
+    scratch: an ``init_cache(batch=1, ...)`` tree, leaves (nL, 1, T, ...);
+    pools: the page-pool tree, leaves (nL, NP, ps, ...); pages: (n,) i32
+    with ``n * ps <= T``.  The gathered tokens land at positions
+    ``[0, n * ps)`` — the prefix the tail chunks attend over.
+    """
+    def one(s, pool):
+        g = pool[:, pages]                            # (nL, n, ps, ...)
+        g = g.reshape((g.shape[0], 1, g.shape[1] * g.shape[2]) + g.shape[3:])
+        return jax.lax.dynamic_update_slice(s, g.astype(s.dtype),
+                                            (0,) * s.ndim)
+
+    return jax.tree.map(one, scratch, pools)
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
+def write_span_pages(pools, scratch, start, pages):
+    """Scatter one chunk's token span from the scratch cache into pages.
+
+    pools: leaves (nL, NP, ps, ...); scratch: leaves (nL, 1, T, ...);
+    start: i32 token index of the span (page-aligned); pages: (n,) i32 —
+    the span covers tokens ``[start, start + n * ps)``.  The f32 scratch
+    values cast to the pool dtype exactly as a monolithic prefill's
+    ``write_prompt_pages`` would, so chunked and single-shot prefill land
+    bitwise-identical pages.
+    """
+    def one(pool, s):
+        nL = s.shape[0]
+        ps = pool.shape[2]
+        n = pages.shape[0]
+        span = jax.lax.dynamic_slice_in_dim(s[:, 0], start, n * ps, axis=1)
+        sp = span.reshape((nL, n, ps) + span.shape[2:])
+        return pool.at[:, pages].set(sp.astype(pool.dtype))
+
+    return jax.tree.map(one, pools, scratch)
 
 
 @functools.partial(jax.jit, donate_argnums=_DONATE)

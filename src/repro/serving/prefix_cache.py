@@ -1,0 +1,172 @@
+"""Copy-on-write prefix cache: page-granular KV sharing across requests.
+
+Real traffic is dominated by shared prompt prefixes (system prompts,
+few-shot preambles).  The paged KV cache already stores prompts as
+fixed-size pages; this module makes those pages *shareable*: full prompt
+pages are hashed into a prefix tree keyed by token-block content, so a
+request whose prompt prefix was already prefilled maps the cached pages
+read-only — via :meth:`PagePool.share` refcounts — and only computes the
+novel tail.
+
+Design points:
+
+  * **content-keyed tree** — each node is one full page of tokens; the
+    path from the root encodes the whole prefix, so page ``j`` of a hit is
+    guaranteed to hold KV computed under exactly the same preceding
+    tokens.  Partial pages are never cached (their KV would be position-
+    padded), which bounds a miss to ``< page_size`` recomputed tokens per
+    boundary.
+  * **copy-on-write** — requests never write shared pages.  The engine
+    COW-splits before any write into a page with ``refcount > 1``:
+    allocate a private copy, rewrite it from the prefill scratch, drop the
+    shared reference.  The cache's pages are therefore immutable.
+  * **LRU eviction under pressure** — the cache holds one reference per
+    node.  When the pool runs dry, :meth:`evict_for` walks leaf nodes
+    (deepest-first within a chain) in least-recently-matched order and
+    frees pages only the cache still owns; pages shared with an in-flight
+    request are never evicted out from under it.
+  * **fault site** ``prefix.lookup`` (:mod:`repro.faults`) — an injected
+    fault makes :meth:`match` report a miss, so a poisoned lookup degrades
+    to a full prefill (token-identical output; chaos-tested).
+
+The tree is host-side bookkeeping only; device pages live in the engine's
+page-pool arrays and move (defrag) via :meth:`remap`.
+"""
+from __future__ import annotations
+
+from .kv_cache import PagePool
+
+
+class _Node:
+    """One cached full page: its pool index, LRU clock, and children
+    keyed by the NEXT page's token tuple."""
+
+    __slots__ = ("page", "last_use", "children", "parent", "key")
+
+    def __init__(self, page: int, parent: "_Node | None", key: tuple):
+        self.page = page
+        self.last_use = 0
+        self.children: dict[tuple, _Node] = {}
+        self.parent = parent
+        self.key = key
+
+
+class PrefixCache:
+    """Prefix tree over a :class:`PagePool`'s refcounted pages.
+
+    The cache owns one pool reference per node (taken via ``pool.share``
+    at :meth:`insert`, dropped via ``pool.free`` at eviction).  ``match``
+    returns shared pages *without* adding references — the engine calls
+    ``pool.share`` only once it commits to mapping them into a request.
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._children: dict[tuple, _Node] = {}        # root level
+        self._clock = 0
+        self.n_nodes = 0
+        self.n_evictions = 0
+
+    # ------------------------------------------------------------ lookup
+
+    def match(self, tokens: list[int]) -> tuple[list[int], int]:
+        """Longest cached full-page prefix of ``tokens``.
+
+        Returns ``(pages, matched_tokens)`` with ``matched_tokens ==
+        len(pages) * page_size``.  Matched nodes' LRU clocks are touched.
+        The ``prefix.lookup`` fault site degrades a poisoned lookup to a
+        clean miss — the engine then runs a full prefill.
+        """
+        from repro import faults
+        if faults.poke("prefix.lookup") is not None:
+            return [], 0
+        ps = self.pool.page_size
+        pages: list[int] = []
+        children = self._children
+        self._clock += 1
+        for start in range(0, len(tokens) - ps + 1, ps):
+            node = children.get(tuple(tokens[start:start + ps]))
+            if node is None:
+                break
+            node.last_use = self._clock
+            pages.append(node.page)
+            children = node.children
+        return pages, len(pages) * ps
+
+    # ------------------------------------------------------------ insert
+
+    def insert(self, tokens: list[int], pages: list[int]) -> int:
+        """Register a prefilled sequence's full pages.
+
+        ``pages[j]`` must hold the KV of ``tokens[j*ps:(j+1)*ps]`` (any
+        trailing partial page is ignored).  New nodes take one pool
+        reference each; token blocks already cached keep their existing
+        page (same content + same prefix ⇒ same KV), and the caller's
+        duplicate page simply remains request-owned.  Returns the number
+        of nodes created.
+        """
+        ps = self.pool.page_size
+        created = 0
+        children = self._children
+        parent: _Node | None = None
+        self._clock += 1
+        for j in range(min(len(tokens) // ps, len(pages))):
+            key = tuple(tokens[j * ps:(j + 1) * ps])
+            node = children.get(key)
+            if node is None:
+                node = _Node(pages[j], parent, key)
+                self.pool.share([pages[j]])
+                children[key] = node
+                self.n_nodes += 1
+                created += 1
+            node.last_use = self._clock
+            children = node.children
+            parent = node
+        return created
+
+    # ---------------------------------------------------------- eviction
+
+    def _leaves(self) -> list[_Node]:
+        out = []
+        stack = list(self._children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            else:
+                out.append(node)
+        return out
+
+    def evict_for(self, n: int) -> int:
+        """Free up to ``n`` pages by evicting least-recently-matched
+        leaves whose pages only the cache still references.  Evicting a
+        leaf can expose its parent as the next candidate, so the walk
+        repeats until the budget is met or nothing evictable remains.
+        Returns the number of pages actually freed."""
+        freed = 0
+        while freed < n:
+            cands = [lf for lf in self._leaves()
+                     if self.pool.refcount(lf.page) == 1]
+            if not cands:
+                break
+            victim = min(cands, key=lambda lf: (lf.last_use, -lf.page))
+            siblings = (victim.parent.children if victim.parent is not None
+                        else self._children)
+            del siblings[victim.key]
+            self.pool.free([victim.page])
+            self.n_nodes -= 1
+            self.n_evictions += 1
+            freed += 1
+        return freed
+
+    # ------------------------------------------------------------ defrag
+
+    def remap(self, mapping: dict[int, int]) -> None:
+        """Apply a :meth:`PagePool.defrag` ``{old: new}`` mapping to every
+        cached node (shared pages moved once on device; every owner's
+        bookkeeping re-points here)."""
+        stack = list(self._children.values())
+        while stack:
+            node = stack.pop()
+            node.page = mapping[node.page]
+            stack.extend(node.children.values())

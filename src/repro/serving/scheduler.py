@@ -42,6 +42,7 @@ from .sampling import SamplingParams
 
 class RequestState(Enum):
     WAITING = "waiting"
+    PREFILLING = "prefilling"      # admitted, prompt prefilling in chunks
     RUNNING = "running"
     FINISHED = "finished"
 
@@ -63,6 +64,9 @@ class Request:
     n_prefill_faults: int = 0          # failed prefill attempts (engine)
     t_enqueue: float | None = None     # tracer clock at add (repro.obs)
     t_last_token: float | None = None  # tracer clock at last accept
+    prefill_done: int = 0              # tokens prefilled so far (chunked)
+    scratch: object = None             # per-request dense scratch cache
+    shared_pages: int = 0              # head pages mapped from the cache
 
     @property
     def full_sequence(self) -> list[int]:
@@ -91,6 +95,11 @@ class Scheduler:
         self._admitted_at: dict[int, int] = {}         # rid -> seq
         self.n_preemptions = 0                         # total evictions
         self.n_parks = 0                               # storm detections
+        # engine-installed prefix-cache eviction hook: called with a page
+        # shortfall when the pool is dry, returns pages actually freed.
+        # Tried once per failed allocation, before FIFO-blocking an
+        # admission or preempting a running request.
+        self.evict_cb = None
 
     # ------------------------------------------------------------ intake
 
@@ -111,12 +120,34 @@ class Scheduler:
 
     # --------------------------------------------------------- admission
 
-    def admit(self) -> list[Request]:
+    def _alloc(self, n: int) -> list[int] | None:
+        """``pool.alloc`` with one prefix-cache eviction retry: when the
+        pool is dry and the engine installed ``evict_cb``, ask the cache
+        to give back least-recently-used pages before giving up.  With no
+        callback (cache off) this is exactly one ``pool.alloc`` call, so
+        fault-injection schedules are unchanged."""
+        pages = self.pool.alloc(n)
+        if pages is None and self.evict_cb is not None:
+            if self.evict_cb(max(1, n - self.pool.num_free)):
+                pages = self.pool.alloc(n)
+        return pages
+
+    def admit(self, plan=None) -> list[Request]:
         """Admit waiting requests FIFO while a slot and pages are
-        available.  Allocates each admission's prompt pages *plus one*
-        growth page worth of headroom (so a request never needs a page on
-        its very first decode step) and assigns a slot; the engine then
-        prefills the batch it gets back."""
+        available.  By default allocates each admission's prompt pages
+        *plus one* growth page worth of headroom (so a request never
+        needs a page on its very first decode step), assigns a slot, and
+        marks it RUNNING; the engine then prefills the batch it gets
+        back.
+
+        ``plan`` (engine-supplied) may redirect a request onto the
+        chunked / shared-prefix path: called with the request, it returns
+        None for the legacy single-shot route, or ``(shared_pages,
+        start_tokens, reserve_pages)`` — the cached pages to map at the
+        head of the block table (one :meth:`PagePool.share` reference
+        each), the token offset prefill resumes from, and the page count
+        to allocate now.  Such admissions enter state PREFILLING and the
+        engine advances them chunk by chunk."""
         # parked storm victims rejoin (at the head — they are the oldest
         # work in the system) once the regular queue has drained: by then
         # the mix that was thrashing them has left the pool
@@ -127,18 +158,39 @@ class Scheduler:
         slots = self.free_slots()
         while self.waiting and slots:
             req = self.waiting[0]
-            need = self.pool.pages_for(len(req.full_sequence) + 1)
-            pages = self.pool.alloc(need)
-            if pages is None:
-                break                                   # strict FIFO
+            decision = plan(req) if plan is not None else None
+            if decision is None:
+                need = self.pool.pages_for(len(req.full_sequence) + 1)
+                pages = self._alloc(need)
+                if pages is None:
+                    break                               # strict FIFO
+                shared, start = [], 0
+                req.state = RequestState.RUNNING
+            else:
+                shared, start, reserve = decision
+                pages = self._alloc(reserve) if reserve else []
+                if pages is None:
+                    break                               # strict FIFO
+                self.pool.share(shared)
+                req.state = RequestState.PREFILLING
             self.waiting.popleft()
-            req.pages = pages
+            req.pages = list(shared) + pages
+            req.shared_pages = len(shared)
+            req.prefill_done = start
             req.slot = slots.pop(0)
-            req.state = RequestState.RUNNING
             self.running[req.slot] = req
             self._admitted_at[req.rid] = next(self._admit_seq)
             admitted.append(req)
         return admitted
+
+    def reserve(self, req: Request, n: int) -> list[int] | None:
+        """Grant ``req`` ``n`` more pages for its next prefill chunk (no
+        preemption here — the engine decides how to handle a dry pool
+        mid-prefill).  Appends to ``req.pages`` on success."""
+        pages = self._alloc(n)
+        if pages is not None:
+            req.pages.extend(pages)
+        return pages
 
     # ------------------------------------------------------ page growth
 
@@ -147,7 +199,7 @@ class Scheduler:
         it fits.  False only when ``req`` is alone and the pool is still
         dry — the pool is simply too small for this sequence."""
         while True:
-            pages = self.pool.alloc(1)
+            pages = self._alloc(1)
             if pages is not None:
                 req.pages.extend(pages)
                 return True
@@ -174,6 +226,11 @@ class Scheduler:
         self.pool.free(req.pages)
         req.pages = []
         req.slot = None
+        # chunked-prefill progress does not survive release: a
+        # re-admission replans (and re-matches the prefix cache) cleanly
+        req.prefill_done = 0
+        req.scratch = None
+        req.shared_pages = 0
 
     def preempt(self, req: Request) -> None:
         """Evict a running request: free its pages, requeue it at the

@@ -1,0 +1,368 @@
+"""Shared-prefix serving: COW prefix cache, chunked prefill, async overlap.
+
+The load-bearing contract (ISSUE 9): with float32 pools, greedy engine
+output is **token-identical** with each serving knob on vs off —
+``prefix_cache`` (copy-on-write page sharing), ``chunked_prefill``
+(prompts prefilled in chunks interleaved with decode), ``async_sched``
+(consume-at-next-step overlap) — individually and all together, across
+the transformer / GQA+window+softcap / MLA+MoE parity archs.  On top:
+refcounted-pool units, prefix-tree units (insert / lookup / COW split /
+refcount / eviction under pressure), shared-prefix-then-defrag parity,
+and chaos coverage for the ``prefix.lookup`` and ``prefill.chunk`` fault
+sites.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import faults, numerics, obs
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serving import (Engine, PagePool, PagePoolError, PrefixCache,
+                           SamplingParams)
+
+
+_PARAMS_CACHE = {}
+
+
+def _model_and_params(arch):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        _PARAMS_CACHE[arch] = (cfg, model,
+                               model.init(jax.random.PRNGKey(0)))
+    return _PARAMS_CACHE[arch]
+
+
+# ====================================================== refcounted pool
+
+def test_pool_share_and_free_refcounts():
+    pool = PagePool(8, 4)
+    pages = pool.alloc(2)
+    assert [pool.refcount(p) for p in pages] == [1, 1]
+    pool.share(pages)
+    assert [pool.refcount(p) for p in pages] == [2, 2]
+    free_before = pool.num_free
+    pool.free(pages)                      # one owner down: still live
+    assert [pool.refcount(p) for p in pages] == [1, 1]
+    assert pool.num_free == free_before
+    pool.free(pages)                      # last owner: back on free list
+    assert [pool.refcount(p) for p in pages] == [0, 0]
+    assert pool.num_free == free_before + 2
+
+
+def test_pool_share_of_non_live_page_raises():
+    pool = PagePool(8, 4)
+    with pytest.raises(PagePoolError):
+        pool.share([3])
+    pages = pool.alloc(1)
+    pool.free(pages)
+    with pytest.raises(PagePoolError):
+        pool.share(pages)                 # freed page can't gain owners
+
+
+def test_pool_double_free_still_raises_with_refcounts():
+    pool = PagePool(8, 4)
+    pages = pool.alloc(1)
+    pool.free(pages)
+    with pytest.raises(PagePoolError):
+        pool.free(pages)
+
+
+def test_pool_defrag_carries_refcounts():
+    pool = PagePool(10, 4)
+    a = pool.alloc(2)
+    b = pool.alloc(2)
+    pool.share(b)
+    pool.free(a)                          # holes below b
+    mapping = pool.defrag()
+    assert [pool.refcount(mapping[p]) for p in b] == [2, 2]
+    assert sorted(mapping[p] for p in b) == [1, 2]
+
+
+# ========================================================== prefix tree
+
+def _toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(0, 97, n)]
+
+
+def test_tree_insert_then_match_full_pages_only():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    toks = _toks(10)                      # 2 full pages + 2-token tail
+    pages = pool.alloc(3)
+    assert cache.insert(toks, pages) == 2   # the partial page is ignored
+    got, matched = cache.match(toks)
+    assert got == pages[:2] and matched == 8
+    # the tree holds one reference per node on top of the allocator's
+    assert [pool.refcount(p) for p in pages] == [2, 2, 1]
+    # a diverging prefix stops the walk at the divergence point
+    other = list(toks)
+    other[5] = (other[5] + 1) % 97
+    got, matched = cache.match(other)
+    assert got == pages[:1] and matched == 4
+
+
+def test_tree_insert_is_idempotent_no_duplicate_refs():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    toks = _toks(8)
+    pages = pool.alloc(2)
+    assert cache.insert(toks, pages) == 2
+    dup = pool.alloc(2)                   # same content, different pages
+    assert cache.insert(toks, dup) == 0   # existing nodes keep their page
+    assert [pool.refcount(p) for p in pages] == [2, 2]
+    assert [pool.refcount(p) for p in dup] == [1, 1]
+
+
+def test_tree_eviction_is_lru_and_skips_shared_pages():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    a, b = _toks(4, seed=1), _toks(4, seed=2)
+    pa, pb = pool.alloc(1), pool.alloc(1)
+    cache.insert(a, pa)
+    cache.insert(b, pb)
+    pool.free(pa)
+    pool.free(pb)                         # now only the cache owns both
+    cache.match(a)                        # touch a: b becomes LRU
+    assert cache.evict_for(1) == 1
+    assert cache.match(b) == ([], 0)      # b evicted...
+    assert cache.match(a) == (pa, 4)      # ...a survives
+    # a page still shared with a "request" is never evicted
+    pool.share(pa)
+    assert cache.evict_for(1) == 0
+    pool.free(pa)
+    assert cache.evict_for(1) == 1 and cache.n_nodes == 0
+    assert pool.num_free == pool.num_pages - 1
+
+
+def test_tree_eviction_deepest_first_within_a_chain():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    toks = _toks(12, seed=3)              # one 3-node chain
+    pages = pool.alloc(3)
+    cache.insert(toks, pages)
+    pool.free(pages)
+    assert cache.evict_for(2) == 2        # leaves peel off the tail
+    got, matched = cache.match(toks)
+    assert got == pages[:1] and matched == 4
+
+
+def test_tree_remap_follows_defrag():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    hole = pool.alloc(2)
+    toks = _toks(8, seed=4)
+    pages = pool.alloc(2)
+    cache.insert(toks, pages)
+    pool.free(pages)
+    pool.free(hole)                       # holes below the cached pages
+    mapping = pool.defrag()
+    cache.remap(mapping)
+    got, matched = cache.match(toks)
+    assert got == [mapping[p] for p in pages] and matched == 8
+    assert all(pool.refcount(p) == 1 for p in got)
+
+
+# ============================================== engine parity (the gate)
+
+PARITY_ARCHS = ["qwen3-0.6b", "gemma2-9b", "deepseek-v3-671b"]
+KNOBS = {
+    "prefix": dict(prefix_cache=True),
+    "chunked": dict(chunked_prefill=16),
+    "async": dict(async_sched=True),
+    "all": dict(prefix_cache=True, chunked_prefill=16, async_sched=True),
+}
+
+
+def _engine_tokens(cfg, params, prompts, nc, gen=4, max_slots=2,
+                   num_pages=25, **kw):
+    eng = Engine(cfg, params, max_slots=max_slots, num_pages=num_pages,
+                 page_size=16, max_pages_per_slot=8, numerics_config=nc,
+                 cache_dtype=jnp.float32, **kw)
+    rids = [eng.add_request(p, SamplingParams(max_tokens=gen, seed=i))
+            for i, p in enumerate(prompts)]
+    out = eng.run()
+    return [list(out[r]) for r in rids], eng
+
+
+def _shared_prompts(cfg, B=3, P=24, shared=16, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, (B, P))
+    prompts[:, :shared] = prompts[0, :shared]
+    return prompts
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+@pytest.mark.parametrize("knob", sorted(KNOBS))
+def test_engine_token_identical_with_knob_on_vs_off(arch, knob):
+    """The acceptance gate: each serving knob (and all together) leaves
+    greedy engine output bitwise unchanged, across GQA / window+softcap /
+    MLA+MoE archs, with f32 pools carrying the reuse path exactly."""
+    cfg, model, params = _model_and_params(arch)
+    prompts = _shared_prompts(cfg)
+    base = numerics.active()
+    ref, _ = _engine_tokens(cfg, params, prompts, base)
+    got, eng = _engine_tokens(cfg, params, prompts,
+                              base.replace(**KNOBS[knob]))
+    assert got == ref
+    stats = eng.stats()
+    if "prefix_cache" in KNOBS[knob]:
+        assert stats["prefix_hits"] >= 1
+        assert stats["prefix_tokens_reused"] >= 16
+    if "chunked_prefill" in KNOBS[knob]:
+        assert stats["prefill_chunks"] >= 1
+
+
+def test_full_prompt_hit_forces_deterministic_cow_split():
+    """Identical prompts: the last position is always recomputed, so a
+    fully-cached prompt rewrites its final page — which is shared, so a
+    COW split must fire (and output stays identical)."""
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    prompts = np.tile(_shared_prompts(cfg, B=1, P=32, shared=32), (3, 1))
+    base = numerics.active()
+    ref, _ = _engine_tokens(cfg, params, prompts, base, max_slots=1)
+    got, eng = _engine_tokens(cfg, params, prompts,
+                              base.replace(prefix_cache=True), max_slots=1)
+    assert got == ref
+    stats = eng.stats()
+    assert stats["prefix_hits"] == 2 and stats["cow_splits"] == 2
+    assert stats["prefix_tokens_reused"] == 32
+
+
+def test_eviction_under_pool_pressure_keeps_parity():
+    """Distinct prompts fill the cache; a pool too small for cache +
+    resident set forces LRU eviction on admission, transparently."""
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 32))    # no sharing
+    base = numerics.active()
+    ref, _ = _engine_tokens(cfg, params, prompts, base, max_slots=1,
+                            num_pages=5)
+    got, eng = _engine_tokens(cfg, params, prompts,
+                              base.replace(prefix_cache=True),
+                              max_slots=1, num_pages=5)
+    assert got == ref
+    assert eng.stats()["prefix_evictions"] >= 1
+
+
+def test_shared_prefix_then_defrag_stays_token_identical():
+    """Satellite (a): defrag while the cache holds shared pages — nodes
+    remap, refcounts travel, and a later hit still reuses them."""
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    prompts = _shared_prompts(cfg)
+    base = numerics.active()
+    ref, _ = _engine_tokens(cfg, params, prompts, base, max_slots=1)
+
+    nc = base.replace(prefix_cache=True)
+    eng = Engine(cfg, params, max_slots=1, num_pages=25, page_size=16,
+                 max_pages_per_slot=8, numerics_config=nc,
+                 cache_dtype=jnp.float32)
+    rids = [eng.add_request(p, SamplingParams(max_tokens=4, seed=i))
+            for i, p in enumerate(prompts)]
+    while len([r for r in rids if eng._requests[r].finished]) < 1:
+        eng.step()
+    eng.defragment()                      # cached pages move mid-serve
+    eng.run()
+    out = eng.results()
+    assert [list(out[r]) for r in rids] == ref
+    assert eng.stats()["prefix_hits"] >= 1
+    # bookkeeping invariant: every cached node's page is live and its
+    # refcount accounts for the tree's own reference
+    stack = list(eng.prefix._children.values())
+    while stack:
+        node = stack.pop()
+        assert eng.pool.refcount(node.page) >= 1
+        stack.extend(node.children.values())
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt admitted behind a running request must not stall it:
+    the chunk phase advances one chunk per step while decode proceeds."""
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    rng = np.random.default_rng(2)
+    short, long = rng.integers(0, cfg.vocab_size, (2, 64))
+    base = numerics.active()
+    ref, _ = _engine_tokens(cfg, params, [short[:16], long], base,
+                            gen=8, num_pages=16)
+    nc = base.replace(chunked_prefill=16)
+    eng = Engine(cfg, params, max_slots=2, num_pages=16, page_size=16,
+                 max_pages_per_slot=8, numerics_config=nc,
+                 cache_dtype=jnp.float32)
+    r0 = eng.add_request(short[:16], SamplingParams(max_tokens=8, seed=0))
+    r1 = eng.add_request(long, SamplingParams(max_tokens=8, seed=1))
+    eng.step()                            # r0 prefills; r1 starts chunking
+    assert eng._requests[r1].prefill_done > 0
+    decoded_before = len(eng._requests[r0].out)
+    eng.step()                            # r1 still chunking...
+    assert len(eng._requests[r0].out) > decoded_before   # ...r0 decodes
+    eng.run()
+    out = eng.results()
+    assert [list(out[r0]), list(out[r1])] == ref
+    assert eng.n_prefill_chunks == 4      # 64 tokens / 16-token chunks
+
+
+# ================================================================ chaos
+
+def test_poisoned_lookup_degrades_to_full_prefill_identically():
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    prompts = _shared_prompts(cfg)
+    base = numerics.active()
+    ref, _ = _engine_tokens(cfg, params, prompts, base)
+    plan = faults.FaultPlan([faults.FaultSpec("prefix.lookup", every=1)])
+    with faults.use(plan):
+        got, eng = _engine_tokens(cfg, params, prompts,
+                                  base.replace(prefix_cache=True))
+    assert got == ref
+    assert eng.stats()["prefix_hits"] == 0         # every lookup poisoned
+    assert plan.log and all(s == "prefix.lookup" for s, _ in plan.log)
+
+
+def test_chunk_fault_requeues_request_token_identically():
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    prompts = _shared_prompts(cfg)
+    base = numerics.active()
+    ref, _ = _engine_tokens(cfg, params, prompts, base)
+    plan = faults.FaultPlan([faults.FaultSpec("prefill.chunk", at=(0,))])
+    with faults.use(plan):
+        got, eng = _engine_tokens(
+            cfg, params, prompts,
+            base.replace(prefix_cache=True, chunked_prefill=16))
+    assert got == ref
+    assert eng.stats()["prefill_faults"] == 1
+    assert plan.log == [("prefill.chunk", 0)]
+
+
+def test_chunk_fault_three_strikes_finishes_with_error():
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    prompts = _shared_prompts(cfg, B=1, P=32)
+    nc = numerics.active().replace(chunked_prefill=16)
+    plan = faults.FaultPlan([faults.FaultSpec("prefill.chunk", every=1)])
+    eng = Engine(cfg, params, max_slots=1, num_pages=25, page_size=16,
+                 max_pages_per_slot=8, numerics_config=nc,
+                 cache_dtype=jnp.float32)
+    rid = eng.add_request(prompts[0], SamplingParams(max_tokens=4))
+    with faults.use(plan):
+        out = eng.run()
+    assert out[rid].finish_reason == "error" and list(out[rid]) == []
+    assert eng.stats()["prefill_faults"] == Engine.MAX_PREFILL_FAULTS
+    # a failed chunked prefill leaks nothing: pool back to empty
+    assert eng.pool.num_live == 0
+
+
+# ========================================================== stats / obs
+
+def test_prefix_stats_surface_in_engine_and_obs_snapshot():
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    prompts = np.tile(_shared_prompts(cfg, B=1, P=32, shared=32), (2, 1))
+    nc = numerics.active().replace(prefix_cache=True)
+    _, eng = _engine_tokens(cfg, params, prompts, nc, max_slots=1)
+    stats = eng.stats()
+    for key in ("prefix_hits", "prefix_tokens_reused", "cow_splits",
+                "prefix_evictions", "prefill_chunks"):
+        assert key in stats
+    src = obs.snapshot()["sources"]["serving/engine"]
+    assert src["prefix_hits"] >= stats["prefix_hits"] >= 1
+    assert src["prefix_tokens_reused"] >= stats["prefix_tokens_reused"]
