@@ -52,7 +52,7 @@ BENCHES = {
 }
 
 # the per-PR throughput trajectory: what --snapshot writes by default
-SNAPSHOT_DEFAULT = ["fig14", "fig14attn", "blocksweep", "serving"]
+SNAPSHOT_DEFAULT = ["fig11", "fig14", "fig14attn", "blocksweep", "serving"]
 
 
 def git_sha() -> str:

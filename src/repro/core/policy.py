@@ -8,8 +8,17 @@ Every weight/activation contraction in the model zoo routes through
   * ``bf16``          — single-pass bf16 MXU GEMM (TC-without-correction baseline)
   * ``tcec_bf16x3``   — 2-way bf16 split, 3 passes  (halfhalf-analogue on TPU)
   * ``tcec_bf16x6``   — 3-way bf16 split, 6 passes  (FP32-matching; the headline)
+  * ``tcec_bf16x9``   — 3-way bf16 split, full 9-product grid + compensated
+                        (TwoSum) accumulation: f64-grade unevaluated sums
+  * ``tcec_bf16x10``  — 4-way bf16 split, triangular 10-pass schedule
+  * ``tcec_fp8e4m3x6 / tcec_fp8e4m3x10 / tcec_fp8e5m2x6`` — fp8-storage
+                        splits (throughput end of the frontier)
   * ``fp16_markidis`` — 2-way fp16 split, 4 passes, no scaling   (Eq. (6))
   * ``fp16_halfhalf`` — 2-way fp16 split, 3 passes, 2**11 scaling (Eq. (19)-(24))
+
+The keep schedules of the families are derived programmatically
+(:func:`triangular_keep` / :func:`full_keep`), so ``tcec_bf16x{n}``
+generalizes past the paper's hand-written x3/x6 lists.
 
 The emulation follows the paper's corrected accumulation discipline: each kept
 split-product ``a_i @ b_j`` is an independent low-precision-in / f32-out GEMM
@@ -44,6 +53,10 @@ class PrecisionPolicy:
     upcast_products: bool = False   # f32-upcast operands before each pass
                                     # (fp16 reproduction path: TCs multiply in
                                     # full precision; XLA-CPU fp16 dots do not)
+    compensated: bool = False       # error-free (TwoSum) group accumulation +
+                                    # fold — f64-grade unevaluated sums from
+                                    # exact narrow products (Chen/Verschelde
+                                    # multi-double analogue); XLA path only
 
     @property
     def jdtype(self):
@@ -63,11 +76,32 @@ class PrecisionPolicy:
         return self.n_splits == 1
 
 
-def _tcec(name, dtype, n_splits, keep, upcast=False):
+def triangular_keep(n_splits: int) -> tuple:
+    """The paper's term schedule generalized to ``n``-way splits: keep every
+    split product whose scale group ``i + j`` fits under the diagonal
+    (``i + j <= n - 1``) — the terms that can still influence the recovered
+    f32 result.  n=2 gives the x3 schedule, n=3 the headline x6, n=4 x10
+    (the triangular numbers)."""
+    return tuple(sorted(((i, j) for i in range(n_splits)
+                         for j in range(n_splits) if i + j <= n_splits - 1),
+                        key=lambda ij: (ij[0] + ij[1], ij)))
+
+
+def full_keep(n_splits: int) -> tuple:
+    """The full n x n product grid — no dropped cross terms, so the only
+    residual left is the split representation error itself (the multi-double
+    regime of Chen & Verschelde): n=3 gives the 9-pass schedule."""
+    return tuple(sorted(((i, j) for i in range(n_splits)
+                         for j in range(n_splits)),
+                        key=lambda ij: (ij[0] + ij[1], ij)))
+
+
+def _tcec(name, dtype, n_splits, keep=None, upcast=False, compensated=False):
     mb = MANTISSA_BITS[jnp.dtype(dtype)] + 1  # incl. implicit bit
+    keep = triangular_keep(n_splits) if keep is None else tuple(keep)
     return PrecisionPolicy(name=name, dtype=dtype, n_splits=n_splits,
-                           scale_bits=mb, keep=tuple(keep),
-                           upcast_products=upcast)
+                           scale_bits=mb, keep=keep,
+                           upcast_products=upcast, compensated=compensated)
 
 
 POLICIES: dict[str, PrecisionPolicy] = {
@@ -78,6 +112,25 @@ POLICIES: dict[str, PrecisionPolicy] = {
                          [(0, 0), (0, 1), (1, 0)]),
     "tcec_bf16x6": _tcec("tcec_bf16x6", "bfloat16", 3,
                          [(0, 0), (0, 1), (1, 0), (1, 1), (0, 2), (2, 0)]),
+    # multi-term family (beyond-f32 accuracy; ROADMAP "up" direction) -----
+    # x9: full 3x3 grid + compensated accumulation — the unevaluated sum
+    # carries ~2^-48 of relative error (f64-grade, see docs/numerics.md);
+    # even folded to a single f32 it beats x6 by the f32 accumulation noise.
+    "tcec_bf16x9": _tcec("tcec_bf16x9", "bfloat16", 3, full_keep(3),
+                         compensated=True),
+    # x10: 4-way triangular schedule on the plain fused-kernel path —
+    # exercises the parametric n-split kernel (4 scale groups).
+    "tcec_bf16x10": _tcec("tcec_bf16x10", "bfloat16", 4),
+    # fp8 storage family (ROADMAP "down" direction; SNIPPETS.md Snippet 3).
+    # upcast_products: no fp8 dot support is assumed of the backend — the
+    # already-rounded terms are upcast to f32 before each pass, exactly the
+    # fp16 reproduction escape hatch.
+    "tcec_fp8e4m3x6": _tcec("tcec_fp8e4m3x6", "float8_e4m3fn", 3,
+                            upcast=True),
+    "tcec_fp8e4m3x10": _tcec("tcec_fp8e4m3x10", "float8_e4m3fn", 4,
+                             upcast=True),
+    "tcec_fp8e5m2x6": _tcec("tcec_fp8e5m2x6", "float8_e5m2", 3,
+                            upcast=True),
     # paper-faithful reproduction policies (fp16 Tensor-Core model) -------
     "fp16_markidis": PrecisionPolicy(
         name="fp16_markidis", dtype="float16", n_splits=2, scale_bits=0,
@@ -130,6 +183,8 @@ def _pass_dot(a, b, policy: PrecisionPolicy, dims, cfg=None):
 
 def _tcec_dot(a, b, policy: PrecisionPolicy, dims, cfg=None):
     """Term-expanded GEMM with per-scale-group f32 accumulators + epilogue."""
+    if policy.compensated:
+        return _compensated_dot(a, b, policy, dims)[0]
     sa = split(a, policy.jdtype, policy.n_splits, policy.scale_bits)
     sb = split(b, policy.jdtype, policy.n_splits, policy.scale_bits)
     groups: dict[int, jax.Array] = {}
@@ -143,6 +198,105 @@ def _tcec_dot(a, b, policy: PrecisionPolicy, dims, cfg=None):
         term = groups[g] * jnp.float32(2.0 ** (-g * policy.scale_bits))
         out = term if out is None else out + term
     return out
+
+
+# --- compensated (error-free) accumulation: the f64-emulation end -----------
+#
+# For narrow split terms the pass products are *exact* in f32 (bf16 x bf16
+# needs <= 16 significand bits), so the only inexact step left is summation.
+# Knuth's TwoSum makes each addition error-free — the group accumulators and
+# the scaled epilogue fold become unevaluated (head, tail) pairs whose sum
+# carries ~K * 2^-48 of relative error: f64-grade accuracy from bf16 storage
+# (Chen & Verschelde's multi-double Tensor-Core arithmetic, PAPERS.md).
+# Scaling by 2^(-g*s) is a power of two and stays exact.  The price is that
+# the K-reduction runs as a sequential scan instead of one MXU dot, so
+# compensated policies are the accuracy extreme of the frontier, not the
+# throughput one, and kernels/dispatch.py declines them (rule 1).
+
+
+def _two_sum(s, x):
+    """Error-free transform: s + x = t + e exactly, t = fl(s + x)."""
+    t = s + x
+    z = t - s
+    e = (s - (t - z)) + (x - z)
+    return t, e
+
+
+def _compensated_dot(a, b, policy: PrecisionPolicy, dims):
+    """Split-product GEMM with TwoSum-compensated accumulation.
+
+    Returns ``(head, tail)`` — the f32 unevaluated sum of the result
+    (``head`` is the correctly-rounded f32 GEMM up to O(2^-48) terms;
+    ``head + tail`` evaluated in higher precision is the f64-grade value).
+
+    Operands are canonicalized (transpose + collapse) onto ``(B, M, K) x
+    (B, K, N)``; unlike the plain path this does reshape, which is
+    acceptable because compensated policies never dispatch to the fused
+    kernels or the sharded fast path — they are the accuracy anchor.
+    """
+    (ca, cb), (ba, bb) = dims
+    am = [d for d in range(a.ndim) if d not in ca and d not in ba]
+    bn = [d for d in range(b.ndim) if d not in cb and d not in bb]
+    at = jnp.transpose(a.astype(jnp.float32), list(ba) + am + list(ca))
+    bt = jnp.transpose(b.astype(jnp.float32), list(bb) + list(cb) + bn)
+    nb, nm, nk = len(ba), len(am), len(ca)
+    bsh, msh = at.shape[:nb], at.shape[nb:nb + nm]
+    ksh, nsh = at.shape[nb + nm:], bt.shape[nb + nk:]
+    import math
+    B, M = max(1, math.prod(bsh)), max(1, math.prod(msh))
+    K, N = max(1, math.prod(ksh)), max(1, math.prod(nsh))
+    a3 = at.reshape(B, M, K)
+    b3 = bt.reshape(B, K, N)
+    sa = [t.astype(jnp.float32) for t in
+          split(a3, policy.jdtype, policy.n_splits, policy.scale_bits)]
+    sb = [t.astype(jnp.float32) for t in
+          split(b3, policy.jdtype, policy.n_splits, policy.scale_bits)]
+    by_group: dict[int, list] = {}
+    for (i, j) in policy.keep:
+        by_group.setdefault(i + j, []).append((i, j))
+    heads, tails = {}, {}
+    for g, pairs in sorted(by_group.items()):
+        # scan the K axis; each step TwoSums this k's pass products into
+        # the group's (head, tail) accumulator panel
+        ak = jnp.stack([jnp.moveaxis(sa[i], -1, 0) for (i, _) in pairs])
+        bk = jnp.stack([jnp.moveaxis(sb[j], 1, 0) for (_, j) in pairs])
+
+        def body(carry, xs, npairs=len(pairs)):
+            s, c = carry
+            xa, xb = xs                       # (P, B, M), (P, B, N)
+            for p in range(npairs):
+                prod = xa[p][:, :, None] * xb[p][:, None, :]   # exact in f32
+                s, e = _two_sum(s, prod)
+                c = c + e
+            return (s, c), None
+
+        zero = jnp.zeros((B, M, N), jnp.float32)
+        (s, c), _ = jax.lax.scan(body, (zero, zero),
+                                 (jnp.moveaxis(ak, 1, 0),
+                                  jnp.moveaxis(bk, 1, 0)))
+        heads[g], tails[g] = s, c
+    # compensated smallest-first epilogue fold (exact power-of-two scales)
+    out_s = jnp.zeros((B, M, N), jnp.float32)
+    out_c = jnp.zeros((B, M, N), jnp.float32)
+    for g in sorted(by_group, reverse=True):
+        inv = jnp.float32(2.0 ** (-g * policy.scale_bits))
+        out_s, e = _two_sum(out_s, heads[g] * inv)
+        out_c = out_c + e + tails[g] * inv
+    head, tail = _two_sum(out_s, out_c)
+    shape = tuple(bsh) + tuple(msh) + tuple(nsh)
+    return head.reshape(shape), tail.reshape(shape)
+
+
+def tcec_dot_unevaluated(a, b, policy=None):
+    """(M, K) @ (K, N) under a compensated policy, returned as the f32
+    unevaluated pair ``(head, tail)`` — evaluate ``head + tail`` in f64 to
+    see the emulated-f64 accuracy (docs/numerics.md, conformance battery)."""
+    pol = get_policy(policy)
+    if not pol.compensated:
+        raise ValueError(f"policy {pol.name!r} is not compensated; only "
+                         "compensated policies produce an unevaluated pair")
+    dims = (((1,), (0,)), ((), ()))
+    return _compensated_dot(a, b, pol, dims)
 
 
 def _plain_dot(a, b, policy: PrecisionPolicy, dims, cfg=None):
@@ -276,15 +430,38 @@ def policy_bmm(a, b, policy=None):
 # Binary einsum front-end: transpose -> dot_general core -> restore layout.
 # ---------------------------------------------------------------------------
 
+class EinsumParseError(ValueError):
+    """Malformed / unsupported ``pdot`` subscripts.
+
+    A typed error (not an ``assert``): subscript validation is a runtime
+    input check and must survive ``python -O`` — a stripped assert would
+    let a malformed spec silently mis-contract."""
+
+
 def _parse(subscripts: str):
-    lhs, out = subscripts.replace(" ", "").split("->")
+    spec = subscripts.replace(" ", "")
+    if spec.count("->") != 1:
+        raise EinsumParseError(
+            f"pdot subscripts need exactly one '->': {subscripts!r}")
+    lhs, out = spec.split("->")
+    if lhs.count(",") != 1:
+        raise EinsumParseError(
+            f"pdot is a binary einsum (exactly one ','): {subscripts!r}")
     a_sub, b_sub = lhs.split(",")
+    for sub in (a_sub, b_sub, out):
+        if len(set(sub)) != len(sub):
+            raise EinsumParseError(
+                f"repeated index in {sub!r} (diagonals/traces are not "
+                f"supported): {subscripts!r}")
     a_set, b_set, o_set = set(a_sub), set(b_sub), set(out)
     batch = [c for c in a_sub if c in b_set and c in o_set]
     contract = [c for c in a_sub if c in b_set and c not in o_set]
     m_dims = [c for c in a_sub if c not in b_set]
     n_dims = [c for c in b_sub if c not in a_set]
-    assert set(out) == set(batch) | set(m_dims) | set(n_dims), subscripts
+    if set(out) != set(batch) | set(m_dims) | set(n_dims):
+        raise EinsumParseError(
+            f"output indices {out!r} must be exactly the batch + uncontracted "
+            f"operand indices of {subscripts!r}")
     return a_sub, b_sub, out, batch, contract, m_dims, n_dims
 
 

@@ -24,6 +24,8 @@ MANTISSA_BITS = {
     jnp.bfloat16.dtype: 7,
     jnp.float16.dtype: 10,
     jnp.float32.dtype: 23,
+    jnp.dtype(jnp.float8_e4m3fn): 3,
+    jnp.dtype(jnp.float8_e5m2): 2,
 }
 
 

@@ -29,6 +29,17 @@ class LPFormat:
 FP16 = LPFormat("fp16", 10, 15)
 BF16 = LPFormat("bf16", 7, 127)
 TF32 = LPFormat("tf32", 10, 127)
+FP8E4M3 = LPFormat("fp8_e4m3", 3, 7)     # OCP e4m3fn: finite-only, max 448
+FP8E5M2 = LPFormat("fp8_e5m2", 2, 15)
+
+#: max unbiased exponent per format (e4m3fn spends the top code on 448, not
+#: inf, hence 8; the rest follow IEEE ``bias`` symmetry)
+MAX_UNBIASED_EXP = {"fp16": 15, "bf16": 127, "tf32": 127,
+                    "fp8_e4m3": 8, "fp8_e5m2": 15}
+
+#: jnp/np dtype-name -> analysis format, for policy-driven lookups
+FORMATS_BY_DTYPE = {"float16": FP16, "bfloat16": BF16,
+                    "float8_e4m3fn": FP8E4M3, "float8_e5m2": FP8E5M2}
 
 
 def _round_int(v: np.ndarray, q: int, mode: str) -> np.ndarray:
@@ -105,6 +116,129 @@ def p_underflow(e_v: int, fmt: LPFormat = FP16, scale_bits: int = 0) -> float:
     return sum(p_l0(l, fmt.mant) for l in range(max(lo + 1, 0), lmax + 1))
 
 
+def p_underflow_term(e_v: int, fmt: LPFormat = FP16, scale_bits: int = 0,
+                     term: int = 1) -> float:
+    """Eq. (15) generalized to the ``i``-th term of an n-way split.
+
+    Term ``i`` stores the ``i``-th residual, whose leading bit sits
+    ``i * (mant+1)`` below ``e_v`` before the ``i * scale_bits`` pre-cast
+    scaling — so its effective exponent is ``e_v + i*(scale_bits-(mant+1))``
+    entering the same one-step closed form.  With the production convention
+    ``scale_bits = mant + 1`` every term sees the same underflow
+    probability as the first (the scaling walks the residual back up to
+    ``e_v`` each stage)."""
+    if term < 1:
+        return 0.0
+    drift = (term - 1) * (scale_bits - (fmt.mant + 1))
+    return p_underflow_gradual(e_v + drift, fmt, scale_bits)
+
+
+def safe_exponent_range(fmt: LPFormat, scale_bits: int,
+                        max_e: int | None = None) -> tuple[int, int]:
+    """Band of unbiased f32 operand exponents where the split is exact-safe:
+    the closed-form P_{u+gu} (Eq. 15) is 0.0 at the low end and the scaled
+    residual cannot overflow ``max_e`` at the high end.
+
+    May be *empty* (lo > hi): fp8_e4m3's 4-bit exponent cannot hold a
+    zero-underflow band at any operand exponent — every fp8_e4m3 split
+    carries the gradual-underflow floor that
+    :func:`split_residual_bound` accounts for."""
+    if max_e is None:
+        max_e = MAX_UNBIASED_EXP[fmt.name]
+    lo = next((e for e in range(-148, 129)
+               if p_underflow_gradual(e, fmt, scale_bits) == 0.0), 129)
+    hi = max_e + fmt.mant + 1 - scale_bits
+    return lo, hi
+
+
+def representable_range(fmt: LPFormat, max_e: int | None = None
+                        ) -> tuple[int, int]:
+    """Unbiased operand exponents the *first* split term can store at all
+    (normal range, no overflow) — the practical band for fp8 policies whose
+    strict zero-underflow band is empty."""
+    if max_e is None:
+        max_e = MAX_UNBIASED_EXP[fmt.name]
+    return -(fmt.bias - 1), max_e - 1
+
+
+# ------------------------------------------------------------------ bounds
+#
+# Closed-form relative-error budget of an n-term split GEMM, the contract
+# the policy-conformance battery holds every POLICIES entry to.  All terms
+# are relative to sum_k |a_ik||b_kj| (elementwise), then converted to the
+# Eq. (7) Frobenius relative residual by the sqrt(K) concentration factor
+# for the zero-mean generators of core/matgen (a factor-4 safety margin is
+# applied on top; bounds are upper bounds, not estimates).
+
+
+def split_residual_bound(fmt: LPFormat, n_splits: int, scale_bits: int,
+                         e_lo: int = 0, e_hi: int = 0) -> float:
+    """Per-operand relative representation error after an n-way RN split.
+
+    Two regimes, whichever floor is higher:
+      * capture width — each RN cast halves the residual ``mant+1`` times:
+        ``2^(-n (mant+1))``;
+      * subnormal quantum — when the band ``[e_lo, e_hi]`` dips below the
+        format's zero-underflow range, stage ``n-1``'s residual is captured
+        at the subnormal quantum ``2^(1 - bias - mant)`` (descaled by its
+        ``(n-1) * scale_bits`` shift), relative to the smallest operand.
+    """
+    w = fmt.mant + 1
+    cap = 2.0 ** (-n_splits * w)
+    lo_safe, _ = safe_exponent_range(fmt, scale_bits)
+    if e_lo >= lo_safe:
+        return cap
+    quantum = 2.0 ** (1 - fmt.bias - fmt.mant
+                      - (n_splits - 1) * scale_bits - e_lo)
+    return max(cap, quantum)
+
+
+def dropped_product_bound(keep, n_splits: int, fmt: LPFormat) -> float:
+    """Relative weight of the split products the schedule drops: term ``i``
+    carries at most ``2^(-i (mant+1))`` of the operand, so product ``(i, j)``
+    contributes at most ``2^(-(i+j)(mant+1))`` of ``|a||b|``."""
+    w = fmt.mant + 1
+    kept = set(keep)
+    return sum(2.0 ** (-(i + j) * w)
+               for i in range(n_splits) for j in range(n_splits)
+               if (i, j) not in kept)
+
+
+def policy_error_bound(policy, k_depth: int,
+                       e_lo: int = 0, e_hi: int = 0) -> float:
+    """Upper bound on the Eq. (7) relative residual of one policy GEMM over
+    a K-deep contraction with operand exponents inside ``[e_lo, e_hi]``.
+
+    ``policy`` is a PrecisionPolicy (or name).  Budget = representation
+    (both operands) + dropped cross products + accumulation:
+      * plain f32: f32 dot rounding only;
+      * plain lp: one RN cast per operand;
+      * split, plain accumulation: per-scale-group f32 accumulators add
+        ``~sqrt(K) 2^-24`` (RMS over the Frobenius norm; worst case would
+        be K u, but Eq. (7) aggregates thousands of outputs);
+      * split, compensated: TwoSum leaves ``K^2 2^-48`` plus the final
+        f32 rounding of the folded head.
+    """
+    import math
+    from . import policy as P
+    pol = P.get_policy(policy) if not hasattr(policy, "keep") else policy
+    u32 = 2.0 ** -24
+    acc_plain = 4.0 * math.sqrt(max(k_depth, 1)) * u32
+    if pol.is_plain():
+        if pol.name == "fp32" or pol.jdtype == np.float32:
+            return acc_plain + 4.0 * u32
+        fmt = FORMATS_BY_DTYPE[pol.dtype]
+        return 4.0 * 2.0 * 2.0 ** -(fmt.mant + 1) + acc_plain
+    fmt = FORMATS_BY_DTYPE[pol.dtype]
+    rep = split_residual_bound(fmt, pol.n_splits, pol.scale_bits, e_lo, e_hi)
+    drop = dropped_product_bound(pol.keep, pol.n_splits, fmt)
+    if pol.compensated:
+        acc = max(k_depth, 1) ** 2 * 2.0 ** -48 + 2.0 * u32
+    else:
+        acc = acc_plain
+    return 4.0 * (2.0 * rep + drop) + acc
+
+
 def measure_underflow(e_v: int, fmt: LPFormat = FP16, scale_bits: int = 0,
                       n: int = 200_000, seed: int = 0) -> tuple[float, float]:
     """Monte-Carlo counterpart of Eqs. (15)/(17) using real IEEE casts.
@@ -120,7 +254,9 @@ def measure_underflow(e_v: int, fmt: LPFormat = FP16, scale_bits: int = 0,
     m = rng.integers(0, 2 ** F32_MANT, size=n, dtype=np.int64)
     v = ((1 << F32_MANT) + m).astype(np.float64) * 2.0 ** (e_v - F32_MANT)
     v = v.astype(np.float32)
-    np_lp = {"fp16": np.float16, "bf16": ml_dtypes.bfloat16}[fmt.name]
+    np_lp = {"fp16": np.float16, "bf16": ml_dtypes.bfloat16,
+             "fp8_e4m3": ml_dtypes.float8_e4m3fn,
+             "fp8_e5m2": ml_dtypes.float8_e5m2}[fmt.name]
     # hi part with RZ (theory assumption): truncate to fmt.mant+1 bits
     width = fmt.mant + 1
     mm, ee = np.frexp(v.astype(np.float64))

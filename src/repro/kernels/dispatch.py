@@ -109,10 +109,20 @@ def _guarded(kernel: str, ident: tuple, cfg, thunk, site: str):
 # ----------------------------------------------------------- eligibility
 
 def eligible_policy(policy: PrecisionPolicy) -> bool:
-    """Rule 1: bf16 split policies only."""
+    """Rule 1: bf16 split policies only.
+
+    The fused kernels are parametric in the policy's term schedule
+    (``keep`` / ``groups`` / ``n_splits``), so any bf16 multi-term policy
+    (x3/x6/x10, ...) routes through them.  Three policy classes decline
+    cleanly to the XLA expansion instead: plain policies (nothing to
+    fuse), ``upcast_products`` policies (the fp16/fp8 reproduction paths
+    assume full-precision products the kernel does not model), and
+    ``compensated`` policies (error-free TwoSum accumulation has no MXU
+    mapping — it is the accuracy extreme, not the throughput one)."""
     return (not policy.is_plain()
             and policy.jdtype == jnp.bfloat16
-            and not policy.upcast_products)
+            and not policy.upcast_products
+            and not policy.compensated)
 
 
 def _canonicalize(a, b, dims):

@@ -48,8 +48,9 @@ import jax.numpy as jnp
 from repro.core import theory
 from . import metrics
 
-_FMT = {"bfloat16": theory.BF16, "float16": theory.FP16}
-_MAX_E = {"bfloat16": 127, "float16": 15}     # max unbiased exponent
+_FMT = dict(theory.FORMATS_BY_DTYPE)          # dtype name -> LPFormat
+_MAX_E = {d: theory.MAX_UNBIASED_EXP[f.name]  # max unbiased exponent
+          for d, f in _FMT.items()}
 
 #: an observed (gradual-)underflow fraction above this raises the
 #: ``numerics/monitor/*_risk`` counters
@@ -77,12 +78,10 @@ def safe_exponent_range(dtype: str, scale_bits: int) -> tuple[int, int]:
     """Unbiased f32 operand exponents for which the residual cast is
     exact: the closed form ``theory.p_underflow_gradual(e, fmt,
     scale_bits)`` is 0.0 at the low end, and the scaled residual cannot
-    exceed the format's max exponent at the high end."""
-    fmt = _FMT[dtype]
-    lo = next(e for e in range(-148, 129)
-              if theory.p_underflow_gradual(e, fmt, scale_bits) == 0.0)
-    hi = _MAX_E[dtype] + fmt.mant + 1 - scale_bits
-    return lo, hi
+    exceed the format's max exponent at the high end.  May be empty
+    (lo > hi) for fp8_e4m3 — see ``theory.safe_exponent_range``."""
+    return theory.safe_exponent_range(_FMT[dtype], scale_bits,
+                                      _MAX_E[dtype])
 
 
 def _subsample(flat, n: int):

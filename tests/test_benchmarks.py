@@ -261,8 +261,8 @@ def test_snapshot_cli_matches_committed_baseline_and_gates_perturbation(
 
 
 def test_snapshot_default_set_covers_throughput_benches():
-    assert run.SNAPSHOT_DEFAULT == ["fig14", "fig14attn", "blocksweep",
-                                    "serving"]
+    assert run.SNAPSHOT_DEFAULT == ["fig11", "fig14", "fig14attn",
+                                    "blocksweep", "serving"]
     for name in run.SNAPSHOT_DEFAULT:
         assert name in run.BENCHES
         assert os.path.exists(

@@ -1,0 +1,537 @@
+"""Policy-conformance battery: registering a policy IS testing it.
+
+Every entry in ``repro.core.POLICIES`` runs through one shared contract —
+schedule invariants, split round-trips, fold-order discipline, forward/
+backward policy agreement through ``custom_vjp``, accuracy ordering vs the
+f32/f64 oracles, dispatch/fallback parity where fused-eligible, and
+measured error within the ``core/theory.py`` closed-form bound.  The
+checks are plain functions over ``PrecisionPolicy`` objects so the
+meta-tests can hand them deliberately-broken unregistered policies and
+assert the battery rejects them.
+
+Runs under ``python -O`` in CI: every contract violation raises a typed
+error or goes through ``_require`` (never a bare ``assert`` for input
+validation paths like ``pdot`` subscript parsing, which has its own
+``-O`` subprocess test here).
+"""
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import numerics
+from repro.core import POLICIES, get_policy, pdot, policy_mm, split, theory
+from repro.core.matgen import exp_rand, relative_residual, urand
+from repro.core.policy import (EinsumParseError, PrecisionPolicy, _dot_impl,
+                               _tcec_dot, full_keep, tcec_dot_unevaluated,
+                               triangular_keep)
+from repro.core.split import MANTISSA_BITS
+from repro.kernels import dispatch, tuning
+from repro.obs import numerics_health
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# The literal registry: the registry-completeness lint (ci.yml) greps each
+# name here, in docs/numerics.md, and in benchmarks/fig11_exponent_range.py.
+# Registering a policy without threading it through all three fails CI.
+EXPECTED_POLICIES = [
+    "bf16",
+    "fp16_halfhalf",
+    "fp16_markidis",
+    "fp32",
+    "tcec_bf16x10",
+    "tcec_bf16x3",
+    "tcec_bf16x6",
+    "tcec_bf16x9",
+    "tcec_fp8e4m3x10",
+    "tcec_fp8e4m3x6",
+    "tcec_fp8e5m2x6",
+]
+
+ALL = sorted(POLICIES)
+SPLIT_POLICIES = [n for n in ALL if not POLICIES[n].is_plain()]
+
+
+def test_registry_is_the_expected_literal():
+    """Keeps EXPECTED_POLICIES greppable and exhaustive: growing POLICIES
+    without updating the literal (and hence docs + fig11) fails here."""
+    assert EXPECTED_POLICIES == ALL
+
+
+# --------------------------------------------------------------- helpers
+
+def _require(cond, msg):
+    """Battery assertion that survives ``python -O``."""
+    if not cond:
+        raise AssertionError(msg)
+
+
+def operand_band(pol: PrecisionPolicy) -> tuple[int, int]:
+    """Unbiased-exponent generator band for one policy: the theory safe
+    range where non-empty, else the format's representable band (fp8_e4m3,
+    whose gradual-underflow floor the error bound carries), clamped so
+    K-deep f32 products stay finite."""
+    if pol.is_plain():
+        if pol.name == "fp32":
+            return (-30, 14)
+        fmt = theory.FORMATS_BY_DTYPE[pol.dtype]
+        lo, hi = theory.representable_range(fmt)
+    else:
+        fmt = theory.FORMATS_BY_DTYPE[pol.dtype]
+        lo, hi = theory.safe_exponent_range(fmt, pol.scale_bits)
+        if lo > hi:  # strict band empty (fp8_e4m3)
+            lo, hi = theory.representable_range(fmt)
+    return max(lo, -40), min(hi, 14)
+
+
+def _band_mats(pol, m, k, n, seed):
+    lo, hi = operand_band(pol)
+    a = exp_rand((m, k), lo, hi, seed=seed)
+    b = exp_rand((k, n), lo, hi, seed=seed + 1)
+    return a, b
+
+
+def _residual(pol, a, b):
+    # _dot_impl (not policy_mm) so unregistered dummy policies from the
+    # meta-tests run the identical forward path without a registry entry
+    c = _dot_impl(jnp.asarray(a), jnp.asarray(b), pol,
+                  (((1,), (0,)), ((), ())))
+    return relative_residual(np.asarray(c), a, b)
+
+
+# ------------------------------------------------ battery check functions
+#
+# Each takes a PrecisionPolicy (registered or not) and raises on violation
+# — the parametrized tests below drive them over POLICIES; the meta-tests
+# drive them over deliberately-broken dummies.
+
+def check_schedule(pol: PrecisionPolicy):
+    """Term-schedule / scale-group invariants."""
+    if pol.is_plain():
+        _require(pol.keep == (), f"{pol.name}: plain policies keep nothing")
+        return
+    _require(pol.jdtype in MANTISSA_BITS,
+             f"{pol.name}: no mantissa table entry for {pol.dtype}")
+    _require(len(set(pol.keep)) == len(pol.keep),
+             f"{pol.name}: duplicate keep entries double-count products")
+    for (i, j) in pol.keep:
+        _require(0 <= i < pol.n_splits and 0 <= j < pol.n_splits,
+                 f"{pol.name}: keep ({i},{j}) outside the "
+                 f"{pol.n_splits}-way split")
+    _require((0, 0) in pol.keep,
+             f"{pol.name}: the leading product (0,0) must be kept")
+    _require(pol.groups == tuple(sorted({i + j for (i, j) in pol.keep})),
+             f"{pol.name}: groups property inconsistent with keep")
+    _require(pol.passes == len(pol.keep), f"{pol.name}: passes != |keep|")
+    _require(set(pol.keep) >= set(triangular_keep(2)) or pol.n_splits < 2,
+             f"{pol.name}: first-order correction terms missing")
+    _require(pol.scale_bits >= 0, f"{pol.name}: negative scale shift")
+
+
+def check_split_roundtrip(pol: PrecisionPolicy, seed: int = 0):
+    """sum(split(x)) == x bitwise where x is exactly representable in the
+    first term; residual within the closed-form bound otherwise."""
+    if pol.is_plain():
+        return
+    x = jnp.asarray(urand((512,), seed=seed))
+    exact = x.astype(pol.jdtype).astype(jnp.float32)
+    parts = split(exact, pol.jdtype, pol.n_splits, pol.scale_bits)
+    rec = sum(p.astype(jnp.float32) * jnp.float32(2.0 ** (-i * pol.scale_bits))
+              for i, p in enumerate(parts))
+    _require(bool(jnp.array_equal(rec, exact)),
+             f"{pol.name}: representable values must round-trip bitwise")
+
+    lo, hi = operand_band(pol)
+    y = np.asarray(exp_rand((2048,), lo, hi, seed=seed + 1))
+    parts = split(jnp.asarray(y), pol.jdtype, pol.n_splits, pol.scale_bits)
+    rec = np.zeros_like(y, dtype=np.float64)
+    for i, p in enumerate(parts):
+        rec += np.asarray(p.astype(jnp.float32), np.float64) \
+            * 2.0 ** (-i * pol.scale_bits)
+    fmt = theory.FORMATS_BY_DTYPE[pol.dtype]
+    e = np.floor(np.log2(np.abs(y))).astype(int)
+    bound = np.array([theory.split_residual_bound(
+        fmt, pol.n_splits, pol.scale_bits, e_lo=int(ei)) for ei in e])
+    rel = np.abs(rec - y.astype(np.float64)) / np.abs(y)
+    bad = rel > 2.0 * bound
+    _require(not bad.any(),
+             f"{pol.name}: split residual {rel[bad][:3]} above closed-form "
+             f"bound {bound[bad][:3]} at exponents {e[bad][:3]}")
+
+
+def check_error_bound(pol: PrecisionPolicy, m=64, k=256, n=64, seed=11):
+    """Measured Eq. (7) residual within theory.policy_error_bound."""
+    a, b = _band_mats(pol, m, k, n, seed)
+    res = _residual(pol, a, b)
+    lo, _ = operand_band(pol)
+    bound = theory.policy_error_bound(pol, k, e_lo=lo)
+    _require(np.isfinite(res),
+             f"{pol.name}: non-finite residual on in-band operands")
+    _require(res <= bound,
+             f"{pol.name}: residual {res:.3e} above closed-form bound "
+             f"{bound:.3e}")
+
+
+def check_fold_order(pol: PrecisionPolicy, seed=5):
+    """The epilogue must fold scale groups smallest-first; the battery
+    recomputes the fold both ways and requires the implementation to match
+    the smallest-first reference bitwise (and, where the schedule has >1
+    group and the largest-first fold differs, to differ from it)."""
+    if pol.is_plain() or pol.compensated:
+        return
+    lo, hi = operand_band(pol)
+    a = jnp.asarray(exp_rand((32, 64), lo, hi, seed=seed))
+    b = jnp.asarray(exp_rand((64, 32), lo, hi, seed=seed + 1))
+    dims = (((1,), (0,)), ((), ()))
+    with numerics.use(enabled=False):
+        cfg = numerics.active()
+        out = _tcec_dot(a, b, pol, dims, cfg)
+        sa = split(a, pol.jdtype, pol.n_splits, pol.scale_bits)
+        sb = split(b, pol.jdtype, pol.n_splits, pol.scale_bits)
+        groups = {}
+        for (i, j) in pol.keep:
+            x, y = sa[i].astype(jnp.float32), sb[j].astype(jnp.float32)
+            t = jax.lax.dot_general(x, y, dims,
+                                    preferred_element_type=jnp.float32)
+            g = i + j
+            groups[g] = t if g not in groups else groups[g] + t
+    small_first, big_first = None, None
+    for g in sorted(groups, reverse=True):
+        t = groups[g] * jnp.float32(2.0 ** (-g * pol.scale_bits))
+        small_first = t if small_first is None else small_first + t
+    for g in sorted(groups):
+        t = groups[g] * jnp.float32(2.0 ** (-g * pol.scale_bits))
+        big_first = t if big_first is None else big_first + t
+    _require(bool(jnp.array_equal(out, small_first)),
+             f"{pol.name}: epilogue is not the smallest-first fold")
+    if len(groups) > 1 and not bool(jnp.array_equal(small_first, big_first)):
+        _require(not bool(jnp.array_equal(out, big_first)),
+                 f"{pol.name}: epilogue matched the largest-first fold")
+
+
+def check_fwd_bwd_agreement(pol: PrecisionPolicy, seed=7):
+    """custom_vjp backward GEMMs run under the same policy: grad of
+    sum(A @ B) must equal the policy dot of ones @ B^T bitwise."""
+    lo, hi = operand_band(pol)
+    a = jnp.asarray(exp_rand((16, 32), lo, hi, seed=seed))
+    b = jnp.asarray(exp_rand((32, 8), lo, hi, seed=seed + 1))
+    da = jax.grad(lambda x: jnp.sum(policy_mm(x, b, pol)))(a)
+    ones = jnp.ones((16, 8), jnp.float32)
+    expected = _dot_impl(ones, b, pol, (((1,), (1,)), ((), ())))
+    _require(bool(jnp.array_equal(da, expected)),
+             f"{pol.name}: backward GEMM did not run under the policy")
+
+
+def check_oracle_ordering(pol: PrecisionPolicy, seed=13):
+    """Accuracy ordering vs the f32 / f64 oracles: any split policy beats
+    its plain storage-dtype baseline by a wide margin on in-band operands,
+    and no policy beats the f64 oracle (residuals are well-defined)."""
+    if pol.is_plain():
+        return
+    a, b = _band_mats(pol, 48, 192, 48, seed)
+    res = _residual(pol, a, b)
+    plain = PrecisionPolicy(name=f"_plain_{pol.dtype}", dtype=pol.dtype)
+    with numerics.use(enabled=False):
+        cfg = numerics.active()
+        from repro.core.policy import _plain_dot
+        c = _plain_dot(jnp.asarray(a), jnp.asarray(b), plain,
+                       (((1,), (0,)), ((), ())), cfg)
+    res_plain = relative_residual(np.asarray(c), a, b)
+    _require(res < res_plain / 4,
+             f"{pol.name}: split residual {res:.3e} does not beat plain "
+             f"{pol.dtype} {res_plain:.3e}")
+
+
+def check_dispatch(pol: PrecisionPolicy, seed=17):
+    """Fused-kernel routing: eligible policies dispatch (interpret mode)
+    and match the XLA term-expansion fallback; ineligible split policies
+    decline cleanly (maybe_dispatch -> None -> fallback), and all paths
+    agree with the f64 oracle to the policy bound."""
+    a, b = _band_mats(pol, 128, 128, 128, seed)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    dims = (((1,), (0,)), ((), ()))
+    with numerics.use(force=True, interpret=True, min_dim=0, tune="off"):
+        cfg = numerics.active()
+        fused = dispatch.maybe_dispatch(aj, bj, pol, dims, cfg)
+    if dispatch.eligible_policy(pol):
+        _require(fused is not None,
+                 f"{pol.name}: eligible policy failed to dispatch")
+        with numerics.use(enabled=False):
+            fallback = _tcec_dot(aj, bj, pol, dims, numerics.active())
+        err = float(jnp.max(jnp.abs(fused - fallback)))
+        scale = float(jnp.max(jnp.abs(fallback))) + 1e-30
+        _require(err <= 1e-6 * scale,
+                 f"{pol.name}: fused kernel diverges from XLA fallback "
+                 f"({err:.3e} vs scale {scale:.3e})")
+    else:
+        _require(fused is None,
+                 f"{pol.name}: ineligible policy must decline dispatch")
+
+
+# ------------------------------------------------- parametrized battery
+
+@pytest.mark.parametrize("name", ALL)
+def test_schedule_invariants(name):
+    check_schedule(POLICIES[name])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_split_roundtrip(name):
+    check_split_roundtrip(POLICIES[name])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_error_within_theory_bound(name):
+    check_error_bound(POLICIES[name])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_epilogue_fold_order(name):
+    check_fold_order(POLICIES[name])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_backward_policy_agreement(name):
+    check_fwd_bwd_agreement(POLICIES[name])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_accuracy_vs_oracles(name):
+    check_oracle_ordering(POLICIES[name])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_dispatch_or_clean_decline(name):
+    check_dispatch(POLICIES[name])
+
+
+def test_tuning_cache_keys_distinct_per_policy():
+    keys = {tuning.cache_key(1, 256, 256, 256, n, "cpu") for n in ALL}
+    assert len(keys) == len(ALL)
+
+
+# ------------------------------------------- property-based generators
+#
+# Replaces hand-picked shapes/exponent cases: shapes and exponent bands are
+# drawn per example; every draw checks a random policy against its bound.
+
+@given(st.sampled_from(SPLIT_POLICIES), st.integers(0, 10**6),
+       st.integers(1, 6), st.integers(1, 8), st.integers(1, 6))
+@settings(max_examples=12, deadline=None)
+def test_property_shapes_and_bands(name, seed, mq, kq, nq):
+    pol = POLICIES[name]
+    m, k, n = 8 * mq, 32 * kq, 8 * nq
+    a, b = _band_mats(pol, m, k, n, seed % 100_000)
+    res = _residual(pol, a, b)
+    lo, _ = operand_band(pol)
+    bound = theory.policy_error_bound(pol, k, e_lo=lo)
+    assert np.isfinite(res) and res <= bound, (name, m, k, n, res, bound)
+
+
+@given(st.sampled_from(SPLIT_POLICIES), st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_property_split_roundtrip(name, seed):
+    check_split_roundtrip(POLICIES[name], seed=seed % 100_000)
+
+
+# ------------------------------------------------- multi-term headliners
+
+def test_multiterm_f64_grade_unevaluated_sum():
+    """tcec_bf16x9's compensated unevaluated pair carries f64-grade
+    accuracy (~2^-48) — the Chen/Verschelde multi-double regime."""
+    a = urand((64, 256), seed=31)
+    b = urand((256, 64), seed=32)
+    h, t = tcec_dot_unevaluated(jnp.asarray(a), jnp.asarray(b), "tcec_bf16x9")
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    val = np.asarray(h, np.float64) + np.asarray(t, np.float64)
+    rel = np.linalg.norm(val - ref) / np.linalg.norm(ref)
+    assert rel < 1e-13, rel
+    # the folded f32 head alone is the correctly-rounded f32 GEMM
+    rel_head = relative_residual(np.asarray(h), a, b)
+    assert rel_head < 6e-8, rel_head
+
+
+def test_multiterm_strictly_beats_x6_on_fig11_types():
+    """Acceptance pin: tcec_bf16x9 strictly below tcec_bf16x6 on every
+    fig11 exponent-range type (compensation removes the f32 accumulation
+    noise that floors x6)."""
+    bands = {"Type1": ((-15, 14), (-15, 14)),
+             "Type2": ((-15, 14), (-100, -35)),
+             "Type3": ((-35, -15), (-35, -15)),
+             "Type4": ((-100, -35), (-100, -35))}
+    for ti, (tname, ((alo, ahi), (blo, bhi))) in enumerate(bands.items()):
+        a = exp_rand((128, 128), alo, ahi, seed=100 + 2 * ti)
+        b = exp_rand((128, 128), blo, bhi, seed=101 + 2 * ti)
+        r9 = _residual(POLICIES["tcec_bf16x9"], a, b)
+        r6 = _residual(POLICIES["tcec_bf16x6"], a, b)
+        assert r9 < r6, (tname, r9, r6)
+        assert r9 < 0.5 * r6, (tname, r9, r6)
+
+
+def test_multiterm_keep_schedules_are_programmatic():
+    assert set(POLICIES["tcec_bf16x3"].keep) == set(triangular_keep(2))
+    assert set(POLICIES["tcec_bf16x6"].keep) == set(triangular_keep(3))
+    assert POLICIES["tcec_bf16x10"].keep == triangular_keep(4)
+    assert POLICIES["tcec_bf16x9"].keep == full_keep(3)
+    assert len(triangular_keep(4)) == 10 and len(full_keep(3)) == 9
+
+
+def test_multiterm_x10_rides_the_parametric_kernel():
+    """The 4-way schedule reaches the fused kernel unchanged: 4 scale
+    groups, 10 passes, fused/fallback parity (check_dispatch covers the
+    numbers; this pins the structural claim)."""
+    pol = POLICIES["tcec_bf16x10"]
+    assert dispatch.eligible_policy(pol)
+    assert pol.groups == (0, 1, 2, 3) and pol.passes == 10
+
+
+# ------------------------------------------------------- fp8 pins
+
+def test_fp8_policies_decline_dispatch_and_upcast():
+    for name in ("tcec_fp8e4m3x6", "tcec_fp8e4m3x10", "tcec_fp8e5m2x6"):
+        pol = POLICIES[name]
+        assert pol.upcast_products and not dispatch.eligible_policy(pol)
+
+
+def test_fp8_safe_ranges_pinned():
+    """theory.safe_exponent_range per storage format (satellite pin):
+    e4m3's strict zero-underflow band is empty — its 4-bit exponent cannot
+    escape gradual underflow at any operand exponent — while e5m2's wider
+    exponent buys a real band."""
+    lo, hi = numerics_health.safe_exponent_range("float8_e4m3fn", 4)
+    assert lo > hi
+    assert numerics_health.safe_exponent_range("float8_e5m2", 3) == (7, 15)
+    # existing pins must not move
+    assert numerics_health.safe_exponent_range("bfloat16", 8) == (-110, 127)
+    assert numerics_health.safe_exponent_range("float16", 11) == (-1, 15)
+    assert numerics_health.safe_exponent_range("float16", 0) == (10, 26)
+    # multi-term bf16 shares the bf16 band
+    p10 = POLICIES["tcec_bf16x10"]
+    assert numerics_health.safe_exponent_range(p10.dtype,
+                                               p10.scale_bits) == (-110, 127)
+
+
+def test_fp8_out_of_band_degrades_not_silently():
+    """Outside its representable band e4m3 storage saturates (fn: to NaN)
+    — out-of-band operands must not come back looking plausible."""
+    a = exp_rand((32, 32), 9, 12, seed=3)   # above e4m3's max exponent
+    b = exp_rand((32, 32), 9, 12, seed=4)
+    c = np.asarray(policy_mm(jnp.asarray(a), jnp.asarray(b),
+                             "tcec_fp8e4m3x6"))
+    assert not np.isfinite(c).all()
+
+
+def test_exponent_band_sweep_per_policy():
+    """fig11-as-a-test (satellite): inside each policy's band the measured
+    residual respects the closed-form bound; K swept across bands."""
+    for name in SPLIT_POLICIES:
+        pol = POLICIES[name]
+        for k in (64, 256):
+            check_error_bound(pol, m=32, k=k, n=32, seed=19 + k)
+
+
+# ------------------------------------------------------- meta-tests
+#
+# A deliberately-broken policy must FAIL the battery — this is what makes
+# "registering a policy is testing it" trustworthy.  The checks are run
+# as one battery: different sabotage trips different checks, and a policy
+# is conformant only when every check passes.
+
+BATTERY = [check_schedule, check_split_roundtrip, check_error_bound,
+           check_fold_order, check_oracle_ordering]
+
+
+def _battery_failures(pol: PrecisionPolicy) -> list[str]:
+    fails = []
+    for chk in BATTERY:
+        try:
+            chk(pol)
+        except Exception:  # any raise is a conformance failure — a broken
+            fails.append(chk.__name__)  # schedule can crash term expansion
+    return fails
+
+
+def test_meta_broken_schedule_fails():
+    bad = PrecisionPolicy(name="broken_idx", dtype="bfloat16", n_splits=3,
+                          scale_bits=8, keep=((0, 0), (0, 1), (1, 0), (3, 0)))
+    assert "check_schedule" in _battery_failures(bad)
+    dup = PrecisionPolicy(name="broken_dup", dtype="bfloat16", n_splits=2,
+                          scale_bits=8, keep=((0, 0), (0, 1), (0, 1)))
+    assert "check_schedule" in _battery_failures(dup)
+
+
+def test_meta_broken_correction_fails_battery():
+    """Dropping the first-order correction terms leaves ~2^-8 of error —
+    the split buys nothing over plain bf16, so the oracle-ordering check
+    rejects it (and the schedule check flags the missing terms)."""
+    bad = PrecisionPolicy(name="broken_nocorr", dtype="bfloat16", n_splits=3,
+                          scale_bits=8,
+                          keep=((0, 0), (1, 1), (0, 2), (2, 0)))
+    fails = _battery_failures(bad)
+    assert "check_schedule" in fails
+    assert "check_oracle_ordering" in fails
+
+
+def test_meta_healthy_dummy_passes():
+    """Sanity: an unregistered but *correct* policy passes every check the
+    broken ones fail (the battery measures the policy, not the name)."""
+    ok = PrecisionPolicy(name="dummy_x6", dtype="bfloat16", n_splits=3,
+                         scale_bits=8, keep=triangular_keep(3))
+    assert _battery_failures(ok) == []
+
+
+# ------------------------------------------------------- -O safety
+
+def test_parse_error_is_typed():
+    for bad in ("ij,jk", "ij,jk,kl->il", "ii,ij->ij", "ij,jk->iq"):
+        with pytest.raises(EinsumParseError):
+            pdot(bad, jnp.ones((2, 2)), jnp.ones((2, 2)), "fp32")
+
+
+def test_parse_error_survives_python_O():
+    """Satellite pin: malformed pdot subscripts raise the typed error even
+    under ``python -O`` (a bare assert would be stripped and silently
+    mis-contract)."""
+    code = (
+        "import jax.numpy as jnp\n"
+        "from repro.core import pdot\n"
+        "from repro.core.policy import EinsumParseError\n"
+        "try:\n"
+        "    pdot('ij,jk->iq', jnp.ones((2, 2)), jnp.ones((2, 2)), 'fp32')\n"
+        "except EinsumParseError:\n"
+        "    print('TYPED-ERROR-OK')\n"
+        "else:\n"
+        "    raise SystemExit('no error raised')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0, out.stderr
+    assert "TYPED-ERROR-OK" in out.stdout
+
+
+# ------------------------------------------------ registry completeness
+
+def _read(rel):
+    with open(os.path.join(REPO, rel)) as f:
+        return f.read()
+
+
+def test_every_policy_documented_in_numerics_md():
+    doc = _read("docs/numerics.md")
+    for name in ALL:
+        assert f"`{name}`" in doc, f"{name} missing from docs/numerics.md"
+
+
+def test_every_policy_in_fig11_bench():
+    src = _read("benchmarks/fig11_exponent_range.py")
+    for name in ALL:
+        assert f'"{name}"' in src, f"{name} missing from fig11 METHODS"
